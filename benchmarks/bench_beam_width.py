@@ -1,0 +1,39 @@
+"""Paper Fig 11 / §7.1.4 — beam width k vs execution time and placement
+quality, on the 24-GPU paper cluster and a 15-type heterogeneous cluster."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import (Rows, effective_instances, full_mode,
+                               paper_inventory, save_json)
+from repro.configs import get_config
+from repro.core.placement import PlacementOptimizer
+
+
+def run(rows: Rows) -> Dict:
+    insts = effective_instances()
+    out: Dict = {}
+    ks = (1, 2, 3, 4, 8) if full_mode() else (1, 2, 3)
+    clusters = {"24gpu_3type": paper_inventory()}
+    if full_mode():
+        clusters["15type"] = {n: 1 for n in insts}
+    for cluster_name, inv in clusters.items():
+        for arch in ("llama-3.1-70b", "qwen3-32b"):
+            spec = get_config(arch).to_modelspec()
+            series = []
+            for k in ks:
+                opt = PlacementOptimizer(spec, inv, insts, 763, 232,
+                                         beam_k=k, max_stages=6)
+                res = opt.search()
+                series.append({"k": k, "wall_s": res.wall_time_s,
+                               "rps": res.throughput_rps,
+                               "score": res.score,
+                               "evaluated": res.evaluated})
+                rows.add(f"beam_width/{cluster_name}/{arch}/k{k}",
+                         res.wall_time_s * 1e6,
+                         f"rps={res.throughput_rps:.3f} "
+                         f"evals={res.evaluated}")
+            out[f"{cluster_name}/{arch}"] = series
+    save_json("beam_width.json", out)
+    return out

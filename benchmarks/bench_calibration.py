@@ -1,0 +1,41 @@
+"""Paper Table 4 / §7.1.5 — one-time calibration overhead.
+
+Runs the actual GEMM / GEMV / AllReduce microbenchmarks on the local device
+and reports wall time per stage (the paper: 1022s over 3 GPU types = 0.03%
+of its evaluation's GPU-hours)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from benchmarks.common import Rows, save_json
+from repro.hw.calibration import (calibrate_allreduce, calibrate_gemm,
+                                  calibrate_gemv)
+
+
+def run(rows: Rows) -> Dict:
+    import statistics
+    t0 = time.perf_counter()
+    gemm = calibrate_gemm()
+    t_gemm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    gemv = calibrate_gemv()
+    t_gemv = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    net = calibrate_allreduce()
+    t_net = time.perf_counter() - t0
+    total = t_gemm + t_gemv + t_net
+    out = {
+        "gemm": {"wall_s": t_gemm,
+                 "eff_flops": statistics.median(gemm)},
+        "gemv": {"wall_s": t_gemv, "eff_bps": statistics.median(gemv)},
+        "allreduce": {"wall_s": t_net, **net},
+        "total_s": total,
+    }
+    rows.add("calibration/total_s", total * 1e6,
+             f"gemm={t_gemm:.2f}s gemv={t_gemv:.2f}s net={t_net:.2f}s "
+             f"eff_flops={out['gemm']['eff_flops']:.3e} "
+             f"(paper: 1022s for 3 GPU types)")
+    save_json("calibration.json", out)
+    return out

@@ -1,0 +1,170 @@
+"""Paper Fig 8 / §7.1.1 — serving performance estimation accuracy.
+
+The paper validates its roofline estimator against TensorRT-LLM measurements
+on A10G/L4/L40S. This container has one CPU, so the validation target is the
+REAL JAX engine on CPU: we calibrate the CPU once (GEMM/GEMV/AllReduce —
+exactly the paper's §7.1.5 protocol), then compare estimator predictions
+against measured prefill/decode wall times across (model x batch x seq)
+configurations and report MAPE.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, save_json
+from repro.configs import get_config
+from repro.core.estimator import Placement, Stage, stage_latencies
+from repro.hw.calibration import calibrate
+from repro.hw.profiles import DeviceProfile, InstanceProfile
+from repro.models import build_model
+
+
+def _cpu_instance(cal) -> InstanceProfile:
+    dev = DeviceProfile("cpu", 16, cal.eff_flops, cal.eff_mem_bw,
+                        cal.net_alpha_s, cal.eff_net_bps, kind="cpu")
+    return InstanceProfile("cpu-node", dev, 1, 1e-4, 1e9, 1.0, 0.3)
+
+
+def _measure(model, params, batch: int, s_in: int, s_out: int
+             ) -> Dict[str, float]:
+    toks = jnp.zeros((batch, s_in), jnp.int32)
+    prefill = jax.jit(lambda p, t: model.prefill(p, {"tokens": t},
+                                                 max_len=s_in + s_out + 1))
+    logits, cache = jax.block_until_ready(prefill(params, toks))
+    t0 = time.perf_counter()
+    logits, cache = jax.block_until_ready(prefill(params, toks))
+    t_prefill = time.perf_counter() - t0
+    step = jax.jit(model.decode_step)
+    nxt = jnp.zeros((batch, 1), jnp.int32)
+    _, cache = jax.block_until_ready(step(params, cache, nxt))
+    t0 = time.perf_counter()
+    iters = max(2, s_out)
+    for _ in range(iters):
+        _, cache = step(params, cache, nxt)
+    jax.block_until_ready(cache["pos"])
+    t_decode = (time.perf_counter() - t0) / iters * s_out
+    return {"prefill_s": t_prefill, "decode_s": t_decode}
+
+
+def _dispatch_overhead_s() -> float:
+    """Per-jit-call dispatch overhead."""
+    f = jax.jit(lambda x: x)
+    x = jnp.zeros((8,), jnp.float32)
+    jax.block_until_ready(f(x))
+    t0 = time.perf_counter()
+    for _ in range(50):
+        out = f(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / 50
+
+
+def _per_op_overhead_s() -> float:
+    """Per-HLO-op execution overhead INSIDE a program (the paper's §8
+    'kernel launch overhead', which its Eq. 1 does not model; dominant for
+    sub-saturation models). Calibrated from the slope of a jitted
+    elementwise chain."""
+    def chain(n):
+        def f(x, w):
+            for _ in range(n):
+                x = jnp.tanh(x @ w)      # tiny dots: unfusable, ~no compute
+            return x
+        g = jax.jit(f, static_argnums=())
+        x = jnp.zeros((8, 8), jnp.float32)
+        w = jnp.eye(8, dtype=jnp.float32) * 0.5
+        jax.block_until_ready(g(x, w))
+        t0 = time.perf_counter()
+        for _ in range(20):
+            out = g(x, w)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 20
+    t_long, t_short = chain(256), chain(32)
+    return max((t_long - t_short) / (2 * 224), 1e-8)   # 2 ops per iter
+
+
+# HLO ops per transformer layer (projections, rope, attention, norms, mlp,
+# residuals) — derived from the compiled reduced-model module op counts.
+OPS_PER_LAYER = {"dense": 34, "moe": 48, "ssm": 42, "hybrid": 44,
+                 "vlm": 36, "audio": 40}
+
+
+def run(rows: Rows) -> Dict:
+    # calibrate at op sizes representative of the reduced models (the paper
+    # calibrates per GPU type at its serving sizes and takes the median)
+    cal = rows.timed(
+        "estimator_accuracy/calibrate_cpu",
+        lambda: calibrate(gemm_sizes=(128, 256, 512),
+                          gemv_sizes=(256, 512, 1024)),
+        lambda c: f"eff_flops={c.eff_flops:.3e}")
+    alpha = _dispatch_overhead_s()
+    alpha_op = _per_op_overhead_s()
+    rows.add("estimator_accuracy/per_op_overhead_s", alpha_op * 1e6, "")
+    inst = _cpu_instance(cal)
+    records: List[Dict] = []
+    errs = []
+    for arch in ["internlm2-1.8b", "qwen2-0.5b", "mamba2-1.3b"]:
+        cfg = get_config(arch).reduced()
+        spec = cfg.to_modelspec()
+        model = build_model(cfg, remat=False, attn_chunk=0, ssd_chunk=16)
+        params = model.init(jax.random.PRNGKey(0))
+        placement = Placement(spec, (Stage(inst, 1, spec.n_layers,
+                                           first=True, last=True),))
+        for batch in (1, 2, 4):
+            for s_in, s_out in ((64, 16), (128, 16)):
+                meas = _measure(model, params, batch, s_in, s_out)
+                pre, dec = stage_latencies(spec, placement, batch, s_in,
+                                           s_out)
+                # Eq.1 + per-op overhead extension: ops ~= layers x
+                # family constant (+logits/embed), once per prefill and per
+                # decode iteration
+                n_ops = (cfg.n_layers
+                         * OPS_PER_LAYER.get(cfg.family, 34) + 8)
+                est = {"prefill_s": sum(pre) + alpha + alpha_op * n_ops,
+                       "decode_s": (sum(dec) + (alpha + alpha_op * n_ops)
+                                    * s_out)}
+                for phase in ("prefill_s", "decode_s"):
+                    ape = abs(est[phase] - meas[phase]) / meas[phase]
+                    errs.append(ape)
+                records.append({"arch": arch, "batch": batch, "s_in": s_in,
+                                "s_out": s_out, **{f"meas_{k}": v for k, v
+                                                   in meas.items()},
+                                **{f"est_{k}": v for k, v in est.items()}})
+    mape = float(np.mean(errs)) * 100
+    med_ape = float(np.median(errs)) * 100
+    rows.add("estimator_accuracy/raw_mape_pct", mape,
+             f"median_ape={med_ape:.1f}pct n={len(errs)} (no device fit)")
+    # The paper fits per-device effective scalars once and reuses them
+    # across every configuration (§7.1.5). Equivalent here: fit one
+    # (prefill, decode) efficiency pair on a single held-in calibration
+    # config (internlm2, batch=2, s=64) and validate on the other 34 cells.
+    calib = next(r for r in records
+                 if r["arch"] == "internlm2-1.8b" and r["batch"] == 2
+                 and r["s_in"] == 64)
+    scale = {ph: calib[f"meas_{ph}"] / calib[f"est_{ph}"]
+             for ph in ("prefill_s", "decode_s")}
+    errs_fit = []
+    for r in records:
+        if r is calib:
+            continue
+        for ph in ("prefill_s", "decode_s"):
+            est = r[f"est_{ph}"] * scale[ph]
+            errs_fit.append(abs(est - r[f"meas_{ph}"]) / r[f"meas_{ph}"])
+    fit_mape = float(np.mean(errs_fit)) * 100
+    fit_med = float(np.median(errs_fit)) * 100
+    rows.add("estimator_accuracy/mape_pct", fit_mape,
+             f"median_ape={fit_med:.1f}pct n={len(errs_fit)} after one-time "
+             f"device fit (paper protocol; paper: 6.63pct on GPUs)")
+    out = {"raw_mape_pct": mape, "mape_pct": fit_mape,
+           "median_ape_pct": fit_med, "device_fit_scale": scale,
+           "dispatch_overhead_s": alpha,
+           "calibration": {"eff_flops": cal.eff_flops,
+                           "eff_mem_bw": cal.eff_mem_bw,
+                           "wall_s": cal.wall_time_s},
+           "records": records}
+    save_json("estimator_accuracy.json", out)
+    return out

@@ -1,0 +1,79 @@
+"""Paper Fig 16 / §7.2.4 — concurrent initialization time breakdown.
+
+Components: node provisioning (virtual, paper-measured distribution), shared
+tensor store load (REAL: cold weight materialization into the store), engine
+init (REAL: building a fresh Engine attached to store weights — the paper's
+key claim is that this needs no weight reload). Reports total vs grace
+period and the store-attach speedup."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows, save_json
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, FTTimes, GlobalServer, TensorStore
+
+
+def run(rows: Rows) -> Dict:
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg, remat=False, attn_chunk=0)
+    ft = FTTimes()
+
+    # store load (cold): init + commit weights
+    store = TensorStore()
+    t0 = time.perf_counter()
+    params = model.init(jax.random.PRNGKey(0))
+    jax.block_until_ready(jax.tree.leaves(params)[0])
+    store.put(cfg.name, "full", params)
+    t_store_cold = time.perf_counter() - t0
+
+    # engine init WITHOUT store first (fresh weight materialization) so the
+    # attach path cannot borrow its compilation warm-up
+    t0 = time.perf_counter()
+    params2 = model.init(jax.random.PRNGKey(0))
+    jax.block_until_ready(jax.tree.leaves(params2)[0])
+    eng2 = Engine(cfg, params2, max_batch=2, max_len=64)
+    t_engine_cold = time.perf_counter() - t0
+
+    # engine init WITH store (attach, no weight reload)
+    t0 = time.perf_counter()
+    attached = store.attach(cfg.name, "full")
+    eng = Engine(cfg, attached, max_batch=2, max_len=64)
+    t_engine_attach = time.perf_counter() - t0
+
+    # virtual-clock downtime: CI vs sequential (paper components)
+    ci_total = ft.node_provision_s + max(ft.store_load_s, ft.engine_init_s)
+    seq_total = ft.node_provision_s + ft.store_load_s + ft.engine_init_s
+    downtime_ci = max(0.0, ci_total - ft.grace_period_s)
+    downtime_seq = (max(ft.grace_period_s, ft.node_provision_s)
+                    + ft.store_load_s + ft.engine_init_s
+                    - ft.grace_period_s)
+
+    out = {
+        "paper_components_s": {"provision": ft.node_provision_s,
+                               "store_load": ft.store_load_s,
+                               "engine_init": ft.engine_init_s,
+                               "grace": ft.grace_period_s},
+        "ci_total_s": ci_total, "sequential_total_s": seq_total,
+        "downtime_ci_s": downtime_ci, "downtime_seq_s": downtime_seq,
+        "measured_local": {"store_cold_s": t_store_cold,
+                           "engine_attach_s": t_engine_attach,
+                           "engine_cold_s": t_engine_cold,
+                           "attach_speedup": t_engine_cold
+                           / max(t_engine_attach, 1e-9)},
+    }
+    rows.add("init_overlap/ci_total_s", ci_total * 1e6,
+             f"downtime_ci={downtime_ci:.1f}s vs seq={downtime_seq:.1f}s "
+             f"(paper: 111.3s total, near-zero downtime in 120s grace)")
+    rows.add("init_overlap/engine_attach_speedup",
+             t_engine_attach * 1e6,
+             f"cold={t_engine_cold:.3f}s attach={t_engine_attach:.3f}s "
+             f"speedup={out['measured_local']['attach_speedup']:.1f}x")
+    save_json("init_overlap.json", out)
+    return out

@@ -1,0 +1,74 @@
+"""Paper Fig 5 / §5.1 — KV-cache transfer vs recomputation latency across
+context lengths, model sizes and device types (analytical, same cost model
+the system uses to pick its recovery strategy)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import Rows, effective_instances, save_json
+from repro.core.estimator import Placement, Stage, stage_latencies
+from repro.core.modelspec import uniform_decoder
+
+
+MODELS = {
+    # llama-3 family: 3B / 8B / 70B (per-layer basis for 70B, like the paper)
+    "llama-3b": uniform_decoder("llama-3b", 28, 3072, 24, 8, 8192, 128256),
+    "llama-8b": uniform_decoder("llama-8b", 32, 4096, 32, 8, 14336, 128256),
+    "llama-70b": uniform_decoder("llama-70b", 80, 8192, 64, 8, 28672,
+                                 128256),
+}
+
+
+def kv_bytes(spec, ctx: int) -> float:
+    return sum(l.kv_bytes_per_token(spec.dtype_bytes) for l in spec.layers
+               ) * ctx
+
+
+# KV transfer runs over TCP between nodes with connection setup, per-tensor
+# serialization and engine coordination — the paper's Fig-5 measurements are
+# far off NIC line rate. Effective bandwidth fraction + fixed setup cost:
+TRANSFER_SETUP_S = 1.0
+TRANSFER_EFF = 0.25
+
+
+def run(rows: Rows) -> Dict:
+    insts = effective_instances()
+    out: Dict = {}
+    for inst_name in ("g6.12xlarge", "g6e.xlarge"):   # L4 vs L40S
+        inst = insts[inst_name]
+        for mname, spec in MODELS.items():
+            per_layer = mname == "llama-70b"   # 70B doesn't fit one GPU
+            series = []
+            for ctx in (1024, 4096, 16384, 65536):
+                # recomputation = prefill over the full context
+                stages = (Stage(inst, 1, spec.n_layers, first=True,
+                                last=True),)
+                p = Placement(spec, stages)
+                pre, _ = stage_latencies(spec, p, 1, ctx, 1)
+                recompute = sum(pre)
+                # transfer = KV bytes over the inter-node network
+                nbytes = kv_bytes(spec, ctx)
+                transfer = (TRANSFER_SETUP_S + inst.inter_alpha_s
+                            + nbytes / (TRANSFER_EFF
+                                        * inst.inter_beta_bps))
+                if per_layer:
+                    recompute /= spec.n_layers
+                    transfer /= spec.n_layers
+                series.append({"ctx": ctx, "recompute_s": recompute,
+                               "transfer_s": transfer})
+            out[f"{inst_name}/{mname}"] = series
+            # crossover context where transfer starts to win (paper: 64k on
+            # L40S for 70B; recompute wins at short/mid contexts)
+            cross = next((p["ctx"] for p in series
+                          if p["transfer_s"] < p["recompute_s"]), None)
+            last = series[-1]
+            rows.add(f"migration/{inst_name}/{mname}",
+                     last["recompute_s"] * 1e6,
+                     f"recompute64k={last['recompute_s']:.3f}s "
+                     f"transfer64k={last['transfer_s']:.3f}s "
+                     f"crossover_ctx={cross}")
+    # decision summary: recomputation wins at short/mid context (paper's
+    # conclusion), transfer can win at very long contexts on fast networks
+    save_json("migration_tradeoff.json", out)
+    return out

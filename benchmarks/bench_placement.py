@@ -1,0 +1,95 @@
+"""Paper Figs 9 & 10 — offline throughput + online latency across placement
+algorithms (ShuntServe DP+beam vs HexGen-genetic vs AlpaServe-DP vs
+vLLM-even), evaluated through the same simulator on the paper's cluster."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import (Rows, calibrate_sim_efficiency,
+                               effective_instances, full_mode,
+                               paper_inventory, save_json)
+from repro.cluster import ClusterSim, FTConfig, azure_conversation_like
+from repro.configs import get_config
+from repro.core import populate_cluster
+from repro.core.baselines import alpaserve_dp, hexgen_genetic, vllm_even
+
+
+def plans_for(spec, insts, inv, beam_k=3):
+    shunt = populate_cluster(spec, inv, insts, 763, 232, beam_k=beam_k)
+    return {
+        "shuntserve": shunt,
+        "hexgen": hexgen_genetic(spec, inv, insts, 763, 232,
+                                 pop_size=16 if full_mode() else 10,
+                                 generations=20 if full_mode() else 8,
+                                 seed=0),
+        "alpaserve": alpaserve_dp(spec, inv, insts, 763, 232),
+        "vllm": vllm_even(spec, inv, insts, 763, 232),
+    }
+
+
+PAPER_SHUNT_RPS = {"llama-3.1-70b": 1.53, "qwen3-32b": 4.59}  # §7.1.2
+
+
+def run(rows: Rows) -> Dict:
+    insts = effective_instances()
+    inv = paper_inventory()
+    out: Dict = {"offline": {}, "online": {}}
+    for arch, rate_online, dur_off in (("llama-3.1-70b", 0.7, 300),
+                                       ("qwen3-32b", 2.4, 300)):
+        spec = get_config(arch).to_modelspec()
+        plans = rows.timed(f"placement/{arch}/search_all",
+                           lambda: plans_for(spec, insts, inv),
+                           lambda p: f"pipes=" + "/".join(
+                               str(len(v.pipelines))
+                               for v in p.values()))
+        # one-time calibration of the roofline->achieved serving efficiency
+        # against the paper's measured ShuntServe throughput (so absolute
+        # scales match the paper; ratios come from our model)
+        eff = calibrate_sim_efficiency(spec, plans["shuntserve"].pipelines,
+                                       PAPER_SHUNT_RPS[arch])
+        # Fig 9: offline throughput (saturated for the whole window)
+        reqs_off = azure_conversation_like(duration_s=dur_off,
+                                           rate_rps=4.67 * 4, seed=0)
+        off = {}
+        for name, plan in plans.items():
+            if not plan.pipelines:
+                off[name] = 0.0
+                continue
+            sim = ClusterSim(spec, plan.pipelines, FTConfig(use_spot=True),
+                             efficiency=eff)
+            off[name] = sim.run(reqs_off, duration_s=dur_off,
+                                offline=True).rps
+        out["offline"][arch] = off
+        base = max(off["hexgen"], off["alpaserve"], off["vllm"], 1e-9)
+        rows.add(f"placement_offline/{arch}/shuntserve_rps",
+                 off["shuntserve"] * 1e6,
+                 f"x{off['shuntserve']/base:.2f} vs best baseline "
+                 f"(hexgen={off['hexgen']:.2f} alpa={off['alpaserve']:.2f} "
+                 f"vllm={off['vllm']:.2f} rps)")
+        # Fig 10: online latency below saturation
+        reqs_on = azure_conversation_like(duration_s=600,
+                                          rate_rps=rate_online, seed=1)
+        on = {}
+        for name, plan in plans.items():
+            if not plan.pipelines:
+                continue
+            sim = ClusterSim(spec, plan.pipelines, FTConfig(use_spot=True),
+                             efficiency=eff)
+            res = sim.run(reqs_on, duration_s=600)
+            on[name] = {
+                "ttft_med": res.percentile("ttft", 0.5),
+                "ttft_p90": res.percentile("ttft", 0.9),
+                "tpot_med": res.percentile("tpot", 0.5),
+                "tpot_p90": res.percentile("tpot", 0.9),
+            }
+        out["online"][arch] = on
+        s = on.get("shuntserve", {})
+        rows.add(f"placement_online/{arch}/ttft_med_s",
+                 s.get("ttft_med", float("nan")) * 1e6,
+                 f"tpot_med={s.get('tpot_med', float('nan')):.4f}s "
+                 f"p90ttft={s.get('ttft_p90', float('nan')):.3f}s")
+    save_json("placement.json", out)
+    return out

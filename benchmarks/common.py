@@ -1,0 +1,78 @@
+"""Shared benchmark helpers: effective instance profiles, cluster setups,
+CSV row collection, JSON result persistence."""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Tuple
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def effective_instances():
+    from repro.hw import AWS_INSTANCES, TPU_INSTANCES, effective
+    out = {}
+    for n, i in {**AWS_INSTANCES, **TPU_INSTANCES}.items():
+        out[n] = dataclasses.replace(i, device=effective(i.device))
+    return out
+
+
+def paper_inventory():
+    from repro.hw import paper_cluster
+    return paper_cluster()
+
+
+def save_json(name: str, payload: Any) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    return path
+
+
+def load_json(name: str) -> Any:
+    with open(os.path.join(RESULTS_DIR, name)) as f:
+        return json.load(f)
+
+
+class Rows:
+    """Collects ``name,us_per_call,derived`` CSV rows."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append((name, us_per_call, derived))
+
+    def timed(self, name: str, fn: Callable[[], Any], derived_fn=None):
+        t0 = time.perf_counter()
+        out = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        derived = derived_fn(out) if derived_fn else ""
+        self.add(name, us, derived)
+        return out
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+def full_mode() -> bool:
+    return os.environ.get("REPRO_FULL", "0") == "1"
+
+
+def calibrate_sim_efficiency(spec, pipelines, paper_rps: float,
+                             n_probe: int = 1500) -> float:
+    """One-time simulator calibration: probe the plan's raw (roofline)
+    offline throughput, then derate so ShuntServe's absolute number matches
+    the paper's measured §7.1.2 value. Ratios across systems/variants come
+    from the model, not the calibration."""
+    from repro.cluster import ClusterSim, FTConfig, azure_conversation_like
+    reqs = azure_conversation_like(duration_s=600, rate_rps=n_probe / 600,
+                                   seed=9)[:n_probe]
+    sim = ClusterSim(spec, pipelines, FTConfig(use_spot=True))
+    raw = sim.run(reqs, duration_s=36000, offline=True).makespan_rps
+    return min(1.0, paper_rps / max(raw, 1e-9))

@@ -1,0 +1,56 @@
+"""§Roofline deliverable — the full (arch x shape) baseline table from the
+dry-run artifacts, single-pod mesh, plus bottleneck classification."""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+from benchmarks.common import Rows, save_json
+from repro.launch.roofline import analyze_file, whats_next
+
+
+def run(rows: Rows) -> Dict:
+    path = os.path.join("results", "dryrun_all.json")
+    if not os.path.exists(path):
+        rows.add("roofline/missing_dryrun", 0.0,
+                 "run: python -m repro.launch.dryrun --all --mesh both "
+                 "--out results/dryrun_all.json")
+        return {}
+    cells = analyze_file(path)
+    single = [c for c in cells if c.mesh == "16x16"]
+    table: List[Dict] = []
+    for c in sorted(single, key=lambda c: (c.arch, c.shape)):
+        table.append({
+            "arch": c.arch, "shape": c.shape, "step": c.step,
+            "compute_s": c.compute_s, "memory_s": c.memory_s,
+            "collective_s": c.collective_s, "bottleneck": c.bottleneck,
+            "model_flops": c.model_flops,
+            "useful_ratio": c.useful_ratio,
+            "roofline_fraction": c.roofline_fraction,
+            "peak_mem_gb": c.peak_mem_bytes / 1e9,
+            "next": whats_next(c),
+        })
+    # aggregate row per step kind
+    for step in ("train_step", "prefill_step", "serve_step"):
+        sub = [t for t in table if t["step"] == step]
+        if not sub:
+            continue
+        avg_frac = sum(t["roofline_fraction"] for t in sub) / len(sub)
+        worst = min(sub, key=lambda t: t["roofline_fraction"])
+        rows.add(f"roofline/{step}/avg_fraction", avg_frac * 1e6,
+                 f"n={len(sub)} worst={worst['arch']}x{worst['shape']}"
+                 f"@{worst['roofline_fraction']:.3f}")
+    bnecks = {}
+    for t in table:
+        bnecks[t["bottleneck"]] = bnecks.get(t["bottleneck"], 0) + 1
+    rows.add("roofline/bottleneck_mix", float(len(table)),
+             " ".join(f"{k}={v}" for k, v in sorted(bnecks.items())))
+    out = {"table": table, "multi_pod": [
+        {"arch": c.arch, "shape": c.shape, "bottleneck": c.bottleneck,
+         "compute_s": c.compute_s, "memory_s": c.memory_s,
+         "collective_s": c.collective_s,
+         "roofline_fraction": c.roofline_fraction}
+        for c in cells if c.mesh == "2x16x16"]}
+    save_json("roofline_table.json", out)
+    return out

@@ -1,0 +1,38 @@
+"""Compare placement algorithms on a heterogeneous cluster (paper Fig 9).
+
+  PYTHONPATH=src python examples/placement_search.py [arch]
+"""
+
+import dataclasses
+import sys
+
+from repro.cluster import ClusterSim, FTConfig, azure_conversation_like
+from repro.configs import get_config
+from repro.core import populate_cluster
+from repro.core.baselines import alpaserve_dp, hexgen_genetic, vllm_even
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-32b"
+spec = get_config(arch).to_modelspec()
+insts = {n: dataclasses.replace(i, device=effective(i.device))
+         for n, i in AWS_INSTANCES.items()}
+inv = paper_cluster()
+
+plans = {
+    "shuntserve": populate_cluster(spec, inv, insts, 763, 232, beam_k=2),
+    "hexgen": hexgen_genetic(spec, inv, insts, 763, 232, pop_size=10,
+                             generations=6),
+    "alpaserve": alpaserve_dp(spec, inv, insts, 763, 232),
+    "vllm": vllm_even(spec, inv, insts, 763, 232),
+}
+reqs = azure_conversation_like(duration_s=240, rate_rps=4.67, seed=0)
+print(f"offline throughput on the paper's 24-GPU cluster ({arch}):")
+for name, plan in plans.items():
+    if not plan.pipelines:
+        print(f"  {name:12s} -- infeasible")
+        continue
+    sim = ClusterSim(spec, plan.pipelines, FTConfig(use_spot=True))
+    rps = sim.run(reqs, duration_s=240, offline=True).rps
+    print(f"  {name:12s} {rps:5.2f} req/s   "
+          f"({len(plan.pipelines)} pipelines, "
+          f"${plan.price_hr(True):.2f}/h spot)")

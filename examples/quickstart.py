@@ -1,0 +1,46 @@
+"""Quickstart: the ShuntServe pipeline in five steps.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.core import Objective, PlacementOptimizer, estimate
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+from repro.models import build_model
+from repro.serving import Engine, ServeRequest
+
+# 1. Pick an architecture (any of the 10 assigned + the paper's models).
+cfg = get_config("llama-3.1-70b")
+spec = cfg.to_modelspec()
+print(f"model: {cfg.name} ({spec.params_total()/1e9:.1f}B params)")
+
+# 2. Calibrated heterogeneous instance profiles (paper Table 1 + §7.1.5).
+insts = {n: dataclasses.replace(i, device=effective(i.device))
+         for n, i in AWS_INSTANCES.items()}
+
+# 3. Find the throughput-per-cost-optimal placement (Algorithm 1).
+opt = PlacementOptimizer(spec, paper_cluster(), insts, s_in=763, s_out=232,
+                         objective=Objective(), beam_k=1, max_stages=6)
+res = opt.search()
+print(f"placement: {res.placement.describe()}")
+print(f"  est. throughput {res.throughput_rps:.2f} req/s at batch "
+      f"{res.batch}, search took {res.wall_time_s:.1f}s")
+
+# 4. Estimate serving metrics for the chosen placement (Eqs. 1-5).
+perf = estimate(spec, res.placement, 763, 232)
+print(f"  TTFT {perf.ttft_s:.3f}s  TPOT {perf.tpot_s*1000:.1f}ms  "
+      f"cost ${res.placement.price_hr(spot=True):.2f}/h (spot)")
+
+# 5. Actually generate tokens with the real engine (reduced config on CPU).
+rcfg = cfg.reduced()
+model = build_model(rcfg, remat=False, attn_chunk=0)
+params = model.init(jax.random.PRNGKey(0))
+eng = Engine(rcfg, params, max_batch=2, max_len=64)
+req = ServeRequest(prompt=[5, 3, 11, 27], max_new_tokens=10)
+eng.admit(req)
+eng.drain()
+print(f"generated tokens: {req.generated}")

@@ -1,0 +1,49 @@
+"""End-to-end driver: serve a small model with batched requests through the
+global server, inject a spot interruption mid-flight, and show that
+output-preserving migration + the shared tensor store keep every request's
+generated output intact (paper §5).
+
+  PYTHONPATH=src python examples/serve_spot_cluster.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import GlobalServer, ServeRequest, TensorStore
+
+cfg = get_config("qwen2-0.5b").reduced()
+model = build_model(cfg, remat=False, attn_chunk=0)
+params = model.init(jax.random.PRNGKey(0))
+
+store = TensorStore()
+srv = GlobalServer(cfg, store, max_batch=3, max_len=96)
+srv.add_pipeline(params, ["spot-a1", "spot-a2"], weight=2.0)
+srv.add_pipeline(params, ["spot-b1"], weight=1.0)
+
+rng = np.random.RandomState(1)
+reqs = [ServeRequest(prompt=rng.randint(0, cfg.vocab, 5).tolist(),
+                     max_new_tokens=14) for _ in range(8)]
+for r in reqs:
+    srv.submit(r)
+
+# serve a few rounds, snapshot progress, then the provider reclaims spot-a1
+for _ in range(4):
+    srv.step()
+snapshot = {r.rid: list(r.generated) for r in reqs}
+in_flight = sum(1 for r in reqs if r.generated and not r.done)
+print(f"before interruption: {in_flight} requests mid-generation")
+
+affected = srv.interrupt_instance("spot-a1")
+print(f"spot-a1 reclaimed -> {len(affected)} requests migrated "
+      f"(recompute-based, outputs preserved)")
+
+srv.run_until_drained()
+ok = all(list(r.generated)[:len(snapshot[r.rid])] == snapshot[r.rid]
+         for r in reqs)
+print(f"all {len(reqs)} requests finished; "
+      f"pre-interruption outputs preserved verbatim: {ok}")
+print(f"tensor store refcounts kept weights resident: "
+      f"{[store.refcount(cfg.name, f'full/p{i}') for i in range(2)]}")
+print("events:", [(round(t, 2), k, d) for t, k, d in srv.events])

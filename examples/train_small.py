@@ -1,0 +1,17 @@
+"""Train a ~small LM for a few hundred steps with checkpoint/restart —
+the training-substrate end-to-end driver.
+
+  PYTHONPATH=src python examples/train_small.py [--steps 200]
+"""
+
+import argparse
+import sys
+
+sys.argv = [sys.argv[0], "--arch", "internlm2-1.8b", "--reduced",
+            "--steps", "200", "--batch", "8", "--seq", "128",
+            "--microbatches", "2", "--ckpt-dir", "/tmp/repro_train_small",
+            "--ckpt-every", "50"] + sys.argv[1:]
+
+from repro.launch.train import main
+
+main()

@@ -1,0 +1,10 @@
+from repro.cluster.simulator import ClusterSim, FTConfig, SimResult
+from repro.cluster.spot_trace import (PAPER_POOLS, AvailabilityTrace,
+                                      generate_trace, select_scenario,
+                                      interruption_events_for_window)
+from repro.cluster.workload import Request, azure_conversation_like
+
+__all__ = ["ClusterSim", "FTConfig", "SimResult", "PAPER_POOLS",
+           "AvailabilityTrace", "generate_trace", "select_scenario",
+           "interruption_events_for_window", "Request",
+           "azure_conversation_like"]

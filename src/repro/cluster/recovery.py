@@ -1,0 +1,85 @@
+"""Hybrid request-recovery policy — the paper's §8.1 future work,
+implemented.
+
+The paper adopts recomputation-only migration because KV transfer must
+complete inside the grace period and fails catastrophically mid-transfer.
+It then notes (Discussion §8.1) that recomputation loses at very long
+contexts (~9.6% slower at 64k on L40S) and sketches a hybrid: "track the
+progress of in-flight requests and the remaining grace period, and select
+an appropriate request recovery mechanism for each request individually."
+
+This module is that policy. Per interrupted request:
+
+    recompute_cost = bottleneck-stage prefill over (s_in + generated)
+    transfer_cost  = setup + kv_bytes(ctx) / effective_bw     [paper Fig 5]
+    pick transfer iff  transfer_cost < recompute_cost
+                   and transfer fits in the REMAINING grace budget
+                   (the paper's §5.1 safety constraint — otherwise a
+                   mid-transfer reclaim forces paying both costs)
+
+The cluster simulator charges the chosen mechanism's cost on re-admission,
+so Fig-13/14-style runs quantify the hybrid's benefit on long-context
+workloads (see benchmarks/bench_fault_tolerance.py hybrid variant and
+tests/test_recovery.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.estimator import Placement, stage_latencies
+from repro.core.modelspec import ModelSpec
+
+# Fig-5-calibrated transfer path constants (see bench_migration_tradeoff)
+TRANSFER_SETUP_S = 1.0
+TRANSFER_EFF = 0.25
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryDecision:
+    mechanism: str            # "recompute" | "transfer"
+    recompute_s: float
+    transfer_s: float
+    fits_grace: bool
+
+
+def kv_bytes_for_ctx(spec: ModelSpec, ctx: int) -> float:
+    total = 0.0
+    for l in spec.layers:
+        tokens = ctx if l.window is None else min(ctx, l.window)
+        total += l.kv_bytes_per_token(spec.dtype_bytes) * tokens
+        total += l.state_bytes_per_seq(spec.dtype_bytes)
+    return total
+
+
+def recompute_seconds(spec: ModelSpec, placement: Placement, ctx: int,
+                      efficiency: float = 1.0) -> float:
+    """Bottleneck-stage prefill over the full context (pipelined view)."""
+    pre, _ = stage_latencies(spec, placement, 1, max(16, ctx), 1)
+    return max(pre) / max(efficiency, 1e-3)
+
+
+def transfer_seconds(spec: ModelSpec, placement: Placement, ctx: int
+                     ) -> float:
+    nbytes = kv_bytes_for_ctx(spec, ctx)
+    link = placement.stages[0].inter_link()
+    return (TRANSFER_SETUP_S + link.alpha_s
+            + nbytes / (TRANSFER_EFF * link.beta_bps))
+
+
+def decide(spec: ModelSpec, placement: Placement, ctx: int,
+           remaining_grace_s: float, policy: str = "hybrid",
+           efficiency: float = 1.0) -> RecoveryDecision:
+    """policy: 'recompute' (paper default), 'transfer', or 'hybrid'
+    (paper §8.1 future work)."""
+    rc = recompute_seconds(spec, placement, ctx, efficiency)
+    tr = transfer_seconds(spec, placement, ctx)
+    fits = tr <= remaining_grace_s
+    if policy == "recompute":
+        mech = "recompute"
+    elif policy == "transfer":
+        mech = "transfer" if fits else "recompute"   # safety fallback
+    else:
+        mech = "transfer" if (fits and tr < rc) else "recompute"
+    return RecoveryDecision(mech, rc, tr, fits)

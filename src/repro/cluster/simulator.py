@@ -1,0 +1,391 @@
+"""Event-driven cluster serving simulator (iteration-level).
+
+Reproduces the paper's evaluation methodology at any scale (24 GPUs to
+1000+ nodes): pipelines run continuous batching whose per-iteration timing
+comes from the SAME roofline estimator the placement optimizer uses; spot
+interruptions, grace periods, output-preserving request migration and
+concurrent initialization follow §5 / §7.2; cost accounting follows §7.2.3.
+
+Fault-tolerance timeline per interruption (defaults = paper Fig 16):
+
+  t_int                      notice; grace until t_int + grace (serving OK)
+  CI:    ready = t_int + provision + max(store_load, engine_init)
+         downtime = [grace_end, max(ready, grace_end)]
+  no CI: old pipeline must die first (duplicate-memory OOM), and the fresh
+         engine loads weights itself:
+         ready = max(grace_end, t_int + provision) + store_load + engine_init
+  migration on: in-flight requests re-queued with generated tokens preserved
+         (recompute = prefill over s_in + generated);
+  off:   restart from scratch (all progress lost).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.workload import Request
+from repro.core.estimator import (Placement, estimate,
+                                  max_batch_size, stage_latencies)
+from repro.core.modelspec import ModelSpec
+
+
+@dataclasses.dataclass
+class FTConfig:
+    use_spot: bool = True
+    request_migration: bool = True
+    concurrent_init: bool = True
+    grace_period_s: float = 120.0
+    node_provision_s: float = 41.55      # paper Fig 16 means
+    store_load_s: float = 61.85
+    engine_init_s: float = 64.51
+    # 'recompute' (paper §5.1 default) | 'transfer' | 'hybrid' (§8.1 future
+    # work, implemented in cluster/recovery.py)
+    recovery_policy: str = "recompute"
+
+
+@dataclasses.dataclass
+class ReqState:
+    req: Request
+    generated: int = 0
+    admit_s: float = -1.0
+    first_token_s: float = -1.0
+    finish_s: float = -1.0
+    migrations: int = 0
+    transfer_recovered: bool = False   # KV arrived via transfer: no re-prefill
+
+
+class SimPipeline:
+    def __init__(self, pid: int, spec: ModelSpec, placement: Placement,
+                 mean_s_in: int, mean_s_out: int):
+        self.pid = pid
+        self.spec = spec
+        self.placement = placement
+        self.b_max = max(1, max_batch_size(spec, placement, mean_s_in,
+                                           mean_s_out))
+        self.mean_s_in = mean_s_in
+        self.eff = 1.0
+        self.queue: List[ReqState] = []
+        self.active: List[ReqState] = []
+        self.alive = True
+        self.next_free = 0.0          # busy-until (one iteration at a time)
+        self.wake_pending = False
+        # pools whose member was already replaced by the ON-DEMAND fallback
+        # (paper §8.2: auxiliary on-demand fallback) — immune to further
+        # spot events from that pool
+        self.replaced_pools: set = set()
+        self.down_until = 0.0
+        self._iter_cache: Dict[int, float] = {}
+        self._prefill_cache: Dict[Tuple[int, int], float] = {}
+        perf = estimate(spec, placement, mean_s_in, mean_s_out)
+        self.weight = max(perf.throughput_rps, 1e-6)
+
+    def t_iter(self, batch: int) -> float:
+        if batch not in self._iter_cache:
+            pre, dec = stage_latencies(self.spec, self.placement, batch,
+                                       self.mean_s_in, 1)
+            self._iter_cache[batch] = max(dec)
+        return self._iter_cache[batch] / self.eff
+
+    def t_prefill(self, batch: int, s_in: int, pipelined: bool = True
+                  ) -> float:
+        """Admission prefill cost. ``pipelined`` charges the bottleneck
+        stage (stages overlap in steady state — consistent with Eq. 5);
+        sum-of-stages is the TTFT view, not the throughput view."""
+        s_b = max(64, (s_in // 128) * 128)
+        key = (batch, s_b, pipelined)
+        if key not in self._prefill_cache:
+            pre, _ = stage_latencies(self.spec, self.placement, batch, s_b, 1)
+            self._prefill_cache[key] = max(pre) if pipelined else sum(pre)
+        return self._prefill_cache[key] / self.eff
+
+    def instances(self) -> List[str]:
+        return [s.instance.name for s in self.placement.stages]
+
+    def price_hr(self, spot: bool) -> float:
+        return self.placement.price_hr(spot)
+
+
+@dataclasses.dataclass
+class SimResult:
+    completed: List[ReqState]
+    unfinished: List[ReqState]
+    duration_s: float
+    cost_usd: float
+    downtime_s: Dict[int, float]
+    interruptions: int
+
+    @property
+    def rps(self) -> float:
+        return len(self.completed) / self.duration_s
+
+    @property
+    def makespan_rps(self) -> float:
+        """Offline throughput: completed / time-of-last-completion (the
+        window-based ratio saturates at the workload arrival rate once the
+        cluster outruns the trace)."""
+        if not self.completed:
+            return 0.0
+        makespan = max(r.finish_s for r in self.completed)
+        return len(self.completed) / max(makespan, 1e-9)
+
+    def latencies(self, kind: str = "e2e") -> List[float]:
+        out = []
+        for r in self.completed:
+            if kind == "e2e":
+                out.append(r.finish_s - r.req.arrival_s)
+            elif kind == "ttft":
+                out.append(r.first_token_s - r.req.arrival_s)
+            elif kind == "tpot":
+                if r.req.s_out > 1 and r.first_token_s >= 0:
+                    out.append((r.finish_s - r.first_token_s)
+                               / max(1, r.req.s_out - 1))
+        return out
+
+    def percentile(self, kind: str, q: float) -> float:
+        xs = sorted(self.latencies(kind))
+        if not xs:
+            return float("nan")
+        i = min(len(xs) - 1, int(q * len(xs)))
+        return xs[i]
+
+    def mean(self, kind: str) -> float:
+        xs = self.latencies(kind)
+        return sum(xs) / len(xs) if xs else float("nan")
+
+
+class ClusterSim:
+    """Iteration-level continuous-batching simulation."""
+
+    def __init__(self, spec: ModelSpec, pipelines: Sequence[Placement],
+                 ft: FTConfig, mean_s_in: int = 763, mean_s_out: int = 232,
+                 seed: int = 0, efficiency: float = 1.0):
+        """efficiency: achieved/roofline serving efficiency. The estimator
+        gives roofline-optimal iteration times; real engines (vLLM on L4s in
+        the paper) land well below. Benchmarks calibrate this once against
+        the paper's measured ShuntServe throughput (§7.1.2) so absolute
+        scales match while all RELATIVE comparisons come from our model."""
+        self.spec = spec
+        self.ft = ft
+        self.efficiency = max(1e-3, efficiency)
+        self.pipes = [SimPipeline(i, spec, p, mean_s_in, mean_s_out)
+                      for i, p in enumerate(pipelines)]
+        for p in self.pipes:
+            p.eff = self.efficiency
+        self._rr = 0.0
+        self._rr_credit = [0.0] * len(self.pipes)
+        self.interruptions = 0
+        self.downtime: Dict[int, float] = defaultdict(float)
+        self.extra_cost = 0.0
+        self._od_fallbacks: List[Tuple[float, str]] = []
+        self._orphans: List[ReqState] = []   # buffered while no pipeline up
+        self.seed = seed
+
+    # -- dispatch ------------------------------------------------------------
+    def _dispatch(self, r: ReqState) -> Optional[SimPipeline]:
+        """Throughput-weighted round robin over alive pipelines (paper §3)."""
+        alive = [p for p in self.pipes if p.alive]
+        if not alive:
+            return None
+        for p in self.pipes:
+            if p.alive:
+                self._rr_credit[p.pid] += p.weight
+        best = max(alive, key=lambda p: self._rr_credit[p.pid])
+        self._rr_credit[best.pid] -= sum(p.weight for p in alive)
+        best.queue.append(r)
+        return best
+
+    # -- interruption handling -------------------------------------------------
+    def _interrupt_pipeline(self, pipe: SimPipeline, t: float,
+                            requeue: List[ReqState], pool: str = ""):
+        ft = self.ft
+        self.interruptions += 1
+        grace_end = t + ft.grace_period_s
+        if ft.concurrent_init:
+            ready = t + ft.node_provision_s + max(ft.store_load_s,
+                                                  ft.engine_init_s)
+            down_start = grace_end
+            down_end = max(ready, grace_end)
+            # replacement billed from t; old billed to grace_end: the overlap
+            # (grace_end - t) double-bills one node (paper: ~$1.10)
+            overlap_h = (grace_end - t) / 3600.0
+            inst = pipe.placement.stages[0]
+            self.extra_cost += inst.price_hr(ft.use_spot) * overlap_h
+        else:
+            ready = (max(grace_end, t + ft.node_provision_s)
+                     + ft.store_load_s + ft.engine_init_s)
+            down_start, down_end = grace_end, ready
+        pipe.down_until = down_end
+        self.downtime[pipe.pid] += down_end - down_start
+        # at grace end the old engine dies: migrate or restart in-flight work
+        for r in list(pipe.active) + list(pipe.queue):
+            if not self.ft.request_migration:
+                r.generated = 0
+                r.first_token_s = -1.0
+            elif (self.ft.recovery_policy != "recompute"
+                  and r.generated > 0):
+                from repro.cluster.recovery import decide
+                d = decide(self.spec, pipe.placement,
+                           r.req.s_in + r.generated, ft.grace_period_s,
+                           policy=self.ft.recovery_policy,
+                           efficiency=self.efficiency)
+                r.transfer_recovered = (d.mechanism == "transfer")
+            r.admit_s = -1.0
+            r.migrations += 1
+            requeue.append(r)
+        pipe.active.clear()
+        pipe.queue.clear()
+        pipe.alive = False
+        pipe.replaced_pools.add(pool)
+        # the replacement runs on-demand until the window ends: bill the
+        # price delta from now (accounted in _total_cost)
+        self._od_fallbacks.append((t, pool))
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, requests: Sequence[Request], duration_s: float,
+            events: Sequence[Tuple[float, str, int]] = (),
+            offline: bool = False) -> SimResult:
+        """events: (t_s, pool_name, delta) availability changes (delta<0
+        interrupts pipelines containing instances of that pool)."""
+        arrivals = sorted(requests, key=lambda r: r.arrival_s)
+        if offline:
+            arrivals = [dataclasses.replace(r, arrival_s=0.0)
+                        for r in arrivals]
+        heap: List[Tuple[float, int, str, object]] = []
+        seq = 0
+
+        def push_wake(t_w: float, pipe: SimPipeline):
+            nonlocal seq
+            if pipe.wake_pending:
+                return
+            pipe.wake_pending = True
+            heapq.heappush(heap, (t_w, seq, "wake", pipe.pid))
+            seq += 1
+        for r in arrivals:
+            heapq.heappush(heap, (r.arrival_s, seq, "arrive", ReqState(r)))
+            seq += 1
+        for (te, pool, delta) in events:
+            if self.ft.use_spot and delta < 0:
+                heapq.heappush(heap, (te, seq, "interrupt", (pool, -delta)))
+                seq += 1
+        for p in self.pipes:
+            heapq.heappush(heap, (0.0, seq, "wake", p.pid))
+            seq += 1
+        completed: List[ReqState] = []
+        t = 0.0
+        while heap:
+            t, _, kind, payload = heapq.heappop(heap)
+            if t > duration_s:
+                break
+            if kind == "arrive":
+                r = payload  # type: ignore[assignment]
+                p = self._dispatch(r)
+                if p is None:
+                    self._orphans.append(r)   # total outage: buffer
+                elif p.alive:
+                    push_wake(max(t, p.next_free), p)
+            elif kind == "interrupt":
+                pool, n = payload  # type: ignore[misc]
+                requeue: List[ReqState] = []
+                hit = 0
+                for p in self.pipes:
+                    if hit >= n:
+                        break
+                    if (p.alive and pool in p.instances()
+                            and pool not in p.replaced_pools):
+                        self._interrupt_pipeline(p, t, requeue, pool)
+                        hit += 1
+                        heapq.heappush(heap, (p.down_until, seq, "revive",
+                                              p.pid))
+                        seq += 1
+                for r in requeue:
+                    p = self._dispatch(r)
+                    if p is None:
+                        self._orphans.append(r)
+                    elif p.alive:
+                        push_wake(max(t, p.next_free), p)
+            elif kind == "revive":
+                p = self.pipes[payload]  # type: ignore[index]
+                p.alive = True
+                p.next_free = t
+                if self._orphans:        # flush buffered requests
+                    orphans, self._orphans = self._orphans, []
+                    for r in orphans:
+                        q = self._dispatch(r)
+                        if q is None:
+                            self._orphans.append(r)
+                push_wake(t, p)
+            elif kind == "wake":
+                p = self.pipes[payload]  # type: ignore[index]
+                p.wake_pending = False
+                if not p.alive:
+                    continue
+                if t < p.next_free - 1e-12:      # still mid-iteration
+                    push_wake(p.next_free, p)
+                    continue
+                dt = self._pipeline_iteration(p, t, completed)
+                if dt > 0:
+                    p.next_free = t + dt
+                    push_wake(t + dt, p)
+        unfinished = []
+        for p in self.pipes:
+            unfinished.extend(p.active)
+            unfinished.extend(p.queue)
+        cost = self._total_cost(duration_s)
+        return SimResult(completed, unfinished, duration_s, cost,
+                         dict(self.downtime), self.interruptions)
+
+    def _pipeline_iteration(self, p: SimPipeline, t: float,
+                            completed: List[ReqState]) -> float:
+        """Admit + one decode iteration; returns elapsed time (0 = idle)."""
+        dt = 0.0
+        # admit newcomers up to b_max
+        new = []
+        while p.queue and len(p.active) + len(new) < p.b_max:
+            new.append(p.queue.pop(0))
+        if new:
+            # transfer-recovered requests carry their KV with them (moved
+            # during the downtime window) — only the rest pay recompute
+            recompute = [r for r in new if not r.transfer_recovered]
+            if recompute:
+                ctx = int(sum(r.req.s_in + r.generated for r in recompute)
+                          / len(recompute))
+                dt += p.t_prefill(len(recompute), ctx)
+            for r in new:
+                r.admit_s = t
+                r.transfer_recovered = False
+                if r.first_token_s < 0:
+                    r.first_token_s = t + dt      # first new token emitted
+                r.generated += 1                   # prefill emits one token
+                p.active.append(r)
+        if not p.active:
+            return dt
+        dt += p.t_iter(len(p.active))
+        done = []
+        for r in p.active:
+            r.generated += 1
+            if r.generated >= r.req.s_out:
+                r.finish_s = t + dt
+                done.append(r)
+        for r in done:
+            p.active.remove(r)
+            completed.append(r)
+        return dt
+
+    def _total_cost(self, duration_s: float) -> float:
+        hours = duration_s / 3600.0
+        base = sum(p.price_hr(self.ft.use_spot) for p in self.pipes) * hours
+        # on-demand fallback premium for each replaced instance
+        od_premium = 0.0
+        if self.ft.use_spot:
+            from repro.hw.profiles import ALL_INSTANCES
+            for (t, pool) in self._od_fallbacks:
+                inst = ALL_INSTANCES.get(pool)
+                if inst is not None:
+                    od_premium += ((inst.price_ondemand_hr
+                                    - inst.price_spot_hr)
+                                   * max(0.0, duration_s - t) / 3600.0)
+        return base + self.extra_cost + od_premium

@@ -1,0 +1,59 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+The 10 assigned architectures plus the paper's two evaluation models.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import ArchConfig
+from repro.configs import shapes as shapes  # re-export module
+
+from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.command_r_plus_104b import CONFIG as _command_r
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
+from repro.configs.qwen2_0_5b import CONFIG as _qwen2
+from repro.configs.h2o_danube3_4b import CONFIG as _danube
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
+from repro.configs.phi35_moe_42b_a6_6b import CONFIG as _phi35
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.llama31_70b import CONFIG as _llama70b
+from repro.configs.qwen3_32b import CONFIG as _qwen3
+
+ASSIGNED: Dict[str, ArchConfig] = {
+    "whisper-tiny": _whisper,
+    "command-r-plus-104b": _command_r,
+    "internlm2-1.8b": _internlm2,
+    "qwen2-0.5b": _qwen2,
+    "h2o-danube-3-4b": _danube,
+    "granite-moe-3b-a800m": _granite,
+    "phi3.5-moe-42b-a6.6b": _phi35,
+    "qwen2-vl-2b": _qwen2vl,
+    "zamba2-2.7b": _zamba2,
+    "mamba2-1.3b": _mamba2,
+}
+
+PAPER_MODELS: Dict[str, ArchConfig] = {
+    "llama-3.1-70b": _llama70b,
+    "qwen3-32b": _qwen3,
+}
+
+REGISTRY: Dict[str, ArchConfig] = {**ASSIGNED, **PAPER_MODELS}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def assigned_archs() -> List[str]:
+    return list(ASSIGNED)
+
+
+__all__ = ["ArchConfig", "ASSIGNED", "PAPER_MODELS", "REGISTRY",
+           "get_config", "assigned_archs", "shapes"]

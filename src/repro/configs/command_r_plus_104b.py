@@ -1,0 +1,27 @@
+"""command-r-plus-104b [dense] — GQA, no-bias.
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000
+[hf:CohereForAI/c4ai-command-r-v01; unverified].
+Cohere models tie input/output embeddings and use LayerNorm.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=33792,
+    vocab=256000,
+    norm="layernorm",
+    gated_ffn=True,
+    act="silu",
+    tie_embeddings=True,
+    rope_theta=75_000_000.0,
+    supports_decode=True,
+    subquadratic=False,
+    source="hf:CohereForAI/c4ai-command-r-plus; unverified",
+)

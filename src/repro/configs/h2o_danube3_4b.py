@@ -1,0 +1,27 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix with sliding-window attention.
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000
+[arXiv:2401.16818; unverified]. SWA window 4096 (mistral-style) makes decode
+memory O(window) — the one dense arch that runs long_500k (ring-buffer KV).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=10240,
+    vocab=32000,
+    swa_window=4096,
+    norm="rmsnorm",
+    gated_ffn=True,
+    act="silu",
+    rope_theta=10_000.0,
+    supports_decode=True,
+    subquadratic=True,          # SWA => O(window) per step
+    source="arXiv:2401.16818; unverified",
+)

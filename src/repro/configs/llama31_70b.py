@@ -1,0 +1,24 @@
+"""Llama-3.1-70B — the paper's primary evaluation model (§7).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256 [arXiv:2407.21783].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.1-70b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=28672,
+    vocab=128256,
+    norm="rmsnorm",
+    gated_ffn=True,
+    act="silu",
+    rope_theta=500_000.0,
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2407.21783 (paper eval model)",
+)

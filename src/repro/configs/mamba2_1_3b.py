@@ -1,0 +1,30 @@
+"""mamba2-1.3b [ssm] — SSD (state-space duality), attention-free.
+
+48L d_model=2048 (attn-free) d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; unverified]. d_inner = 2*d_model = 4096, head_dim 64 =>
+64 SSD heads.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    conv_width=4,
+    norm="rmsnorm",
+    gated_ffn=False,
+    act="silu",
+    tie_embeddings=True,
+    supports_decode=True,
+    subquadratic=True,
+    source="arXiv:2405.21060; unverified",
+)

@@ -1,0 +1,27 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 16 experts, top-2.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=6400 (per-expert) vocab=32064
+[hf:microsoft/Phi-3.5-MoE-instruct; hf].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6400,                   # per-expert intermediate
+    vocab=32064,
+    n_experts=16,
+    moe_top_k=2,
+    norm="layernorm",
+    gated_ffn=True,
+    act="silu",
+    rope_theta=10_000.0,
+    supports_decode=True,
+    subquadratic=False,
+    source="hf:microsoft/Phi-3.5-MoE-instruct; hf",
+)

@@ -1,0 +1,31 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution (frontend stubbed).
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936 [arXiv:2409.12191; hf].
+The vision tower is a stub per the brief: ``input_specs`` provides precomputed
+patch embeddings (B, S, d_model) and 3-axis M-RoPE position ids (3, B, S).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    m_rope=True,
+    mrope_sections=(16, 24, 24),
+    norm="rmsnorm",
+    gated_ffn=True,
+    act="silu",
+    tie_embeddings=True,
+    rope_theta=1_000_000.0,
+    frontend="vision_embeds",
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2409.12191; hf",
+)

@@ -1,0 +1,26 @@
+"""Qwen3-32B — the paper's second evaluation model (§7).
+
+64L d_model=5120 64H (GQA kv=8) head_dim=128 d_ff=25600 vocab=151936
+[arXiv:2505.09388].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab=151936,
+    norm="rmsnorm",
+    gated_ffn=True,
+    act="silu",
+    rope_theta=1_000_000.0,
+    supports_decode=True,
+    subquadratic=False,
+    source="arXiv:2505.09388 (paper eval model)",
+)

@@ -1,0 +1,32 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend stubbed.
+
+4L d_model=384 6H (MHA kv=6) d_ff=1536 vocab=51865 [arXiv:2212.04356].
+The audio frontend (log-mel + conv) is a stub per the brief: ``input_specs``
+provides precomputed frame embeddings (B, S_enc, d_model).
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,                 # decoder layers
+    n_encoder_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    qkv_bias=True,              # whisper uses biases (no bias on k_proj in
+    o_bias=True,                # HF impl; we keep the fused-bias form)
+    mlp_bias=True,
+    norm="layernorm",
+    gated_ffn=False,
+    act="gelu",
+    tie_embeddings=True,
+    frontend="audio_frames",
+    rope_theta=0.0,             # whisper uses absolute positions, not RoPE
+    supports_decode=True,
+    subquadratic=False,         # full attention -> skip long_500k
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,34 @@
+"""zamba2-2.7b [hybrid] — Mamba2 trunk + shared attention blocks.
+
+54L d_model=2560 32H (MHA kv=32) d_ff=10240 vocab=32000, ssm_state=64
+[arXiv:2411.15242; hf]. One shared transformer block (attention + MLP over
+the concat of hidden and trunk input, as in Zamba) fires every 6 trunk
+layers; each application keeps its own KV cache. Simplifications vs the HF
+checkpoint (per-application LoRA adapters, dual alternating shared blocks)
+are recorded in DESIGN.md §5.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,                 # mamba2 trunk layers
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,                  # shared block MLP
+    vocab=32000,
+    head_dim=80,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    hybrid_period=6,
+    norm="rmsnorm",
+    gated_ffn=True,
+    act="silu",
+    rope_theta=10_000.0,
+    supports_decode=True,
+    subquadratic=True,           # SSM trunk dominates; runs long_500k
+    source="arXiv:2411.15242; hf",
+)

@@ -1,0 +1,36 @@
+"""Optimization objective — paper §4.2.3, Eq. 7.
+
+    argmax_p  Throughput(p)/Cost(p) * (1 - gamma * max(0, latency/SLO - 1))
+
+gamma=0 (paper default) optimizes pure throughput-per-cost; gamma=inf makes
+the SLO a hard constraint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.core.estimator import PerfEstimate, Placement
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    gamma: float = 0.0
+    slo_s: float = math.inf
+    spot_pricing: bool = True
+    # throughput-only mode (used by some baselines / ablations)
+    per_cost: bool = True
+
+    def score(self, placement: Placement, perf: PerfEstimate) -> float:
+        if perf.throughput_rps <= 0:
+            return 0.0
+        cost = placement.price_hr(spot=self.spot_pricing)
+        base = perf.throughput_rps / cost if self.per_cost else perf.throughput_rps
+        if self.gamma == 0.0 or math.isinf(self.slo_s):
+            return base
+        violation = max(0.0, perf.e2e_latency_s / self.slo_s - 1.0)
+        if math.isinf(self.gamma):
+            return 0.0 if violation > 0 else base
+        return base * max(0.0, 1.0 - self.gamma * violation)

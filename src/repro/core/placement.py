@@ -1,0 +1,236 @@
+"""Partitioned model placement optimizer — paper §4.2, Algorithm 1.
+
+DP over (layers placed, stages used) with beam search: ``DP[l][s]`` holds the
+top-k partial pipelines that place the first ``l`` layers on ``s`` stages.
+Each extension assigns the next ``l - l'`` layers to a fresh stage drawn from
+the available instance inventory (instance type x TP degree), computes the
+max batch (Eq. 6) and estimated throughput (Eq. 4/5) of the *partial*
+placement — the op-level estimator makes partial pipelines comparable, which
+is what gives the problem (approximate) optimal substructure — and keeps the
+beam's best k.
+
+Inventory handling (beyond the paper's pseudocode, required for real
+clusters): each candidate tracks devices consumed per instance type so a
+stage can only be added while inventory remains; one *instance* may host
+multiple stages (intra-node TP slices, cf. HexGen's 4xL4 = 4 stages) but an
+instance never spans pipelines (paper §4.2.1 fault-isolation rule).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.estimator import (Placement, Stage, estimate,
+                                  max_batch_size)
+from repro.core.modelspec import ModelSpec
+from repro.core.objective import Objective
+from repro.hw.profiles import InstanceProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class StageOption:
+    """A way to build one stage: ``tp`` devices of one instance type."""
+
+    instance: InstanceProfile
+    tp: int
+
+    @property
+    def key(self) -> Tuple[str, int]:
+        return (self.instance.name, self.tp)
+
+
+def stage_options_for(instances: Sequence[InstanceProfile],
+                      max_tp: Optional[int] = None) -> List[StageOption]:
+    opts = []
+    for inst in instances:
+        d = 1
+        while d <= inst.num_devices:
+            if inst.num_devices % d == 0 and (max_tp is None or d <= max_tp):
+                opts.append(StageOption(inst, d))
+            d *= 2
+    return opts
+
+
+@dataclasses.dataclass(frozen=True)
+class _Partial:
+    """A partial pipeline in the DP table."""
+
+    stages: Tuple[Stage, ...]
+    used_devices: Tuple[Tuple[str, int], ...]   # (instance_name, devices)
+    score: float
+
+    def used(self) -> Dict[str, int]:
+        return dict(self.used_devices)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    placement: Optional[Placement]
+    score: float
+    batch: int
+    throughput_rps: float
+    wall_time_s: float
+    evaluated: int
+
+
+class PlacementOptimizer:
+    """Paper Algorithm 1."""
+
+    def __init__(self, spec: ModelSpec, inventory: Dict[str, int],
+                 instances: Dict[str, InstanceProfile], s_in: int,
+                 s_out: int, objective: Optional[Objective] = None,
+                 beam_k: int = 3, max_stages: Optional[int] = None,
+                 max_tp: Optional[int] = None, batch_cap: int = 512):
+        self.spec = spec
+        # inventory in *device* units per instance type
+        self.inventory = {
+            name: count * instances[name].num_devices
+            for name, count in inventory.items()}
+        self.instances = instances
+        self.s_in, self.s_out = s_in, s_out
+        self.objective = objective or Objective()
+        self.beam_k = beam_k
+        self.max_stages = max_stages or min(spec.n_layers, 16)
+        self.options = stage_options_for(
+            [instances[n] for n in inventory], max_tp=max_tp)
+        self.batch_cap = batch_cap
+        self.evaluated = 0
+
+    # -- scoring -----------------------------------------------------------
+    def _evaluate(self, stages: Tuple[Stage, ...], n_layers_placed: int
+                  ) -> Tuple[float, int, float]:
+        """Score a (possibly partial) pipeline.
+
+        Partial pipelines are scored on the layers placed so far with the
+        last stage temporarily holding the LM head, mirroring the paper's
+        'evaluating partial model placements within DP subproblems'.
+        """
+        spec = self.spec
+        if n_layers_placed == spec.n_layers:
+            pspec = spec
+        else:
+            pspec = dataclasses.replace(
+                spec, layers=spec.layers[:n_layers_placed])
+        stages = tuple(
+            dataclasses.replace(s, first=(i == 0),
+                                last=(i == len(stages) - 1))
+            for i, s in enumerate(stages))
+        placement = Placement(pspec, stages)
+        perf = estimate(pspec, placement, self.s_in, self.s_out)
+        self.evaluated += 1
+        score = self.objective.score(placement, perf)
+        return score, perf.batch, perf.throughput_rps
+
+    # -- Algorithm 1 ---------------------------------------------------------
+    def search(self) -> SearchResult:
+        t0 = time.perf_counter()
+        n_l = self.spec.n_layers
+        # DP[l][s] -> beam (list of _Partial, best first)
+        dp: Dict[Tuple[int, int], List[_Partial]] = {(0, 0): [
+            _Partial((), (), 0.0)]}
+        for l in range(1, n_l + 1):
+            for lprime in range(0, l):
+                l_new = l - lprime
+                for s in range(0, min(lprime + 1, self.max_stages)):
+                    beam = dp.get((lprime, s))
+                    if not beam:
+                        continue
+                    s_new = s + 1
+                    for cand, opt in itertools.product(beam[:self.beam_k],
+                                                       self.options):
+                        used = cand.used()
+                        if (used.get(opt.instance.name, 0) + opt.tp
+                                > self.inventory.get(opt.instance.name, 0)):
+                            continue
+                        stage = Stage(opt.instance, opt.tp, l_new)
+                        stages = cand.stages + (stage,)
+                        score, batch, _ = self._evaluate(stages, l)
+                        if batch <= 0 and l == n_l:
+                            continue
+                        used[opt.instance.name] = (
+                            used.get(opt.instance.name, 0) + opt.tp)
+                        new = _Partial(stages, tuple(sorted(used.items())),
+                                       score)
+                        self._update(dp, (l, s_new), new)
+        return self._extract(dp, t0)
+
+    def _update(self, dp, key, cand: _Partial) -> None:
+        beam = dp.setdefault(key, [])
+        beam.append(cand)
+        beam.sort(key=lambda c: -c.score)
+        del beam[self.beam_k:]
+
+    def _extract(self, dp, t0) -> SearchResult:
+        n_l = self.spec.n_layers
+        best: Optional[_Partial] = None
+        for s in range(1, self.max_stages + 1):
+            for cand in dp.get((n_l, s), []):
+                if best is None or cand.score > best.score:
+                    best = cand
+        wall = time.perf_counter() - t0
+        if best is None:
+            return SearchResult(None, 0.0, 0, 0.0, wall, self.evaluated)
+        stages = tuple(
+            dataclasses.replace(st, first=(i == 0),
+                                last=(i == len(best.stages) - 1))
+            for i, st in enumerate(best.stages))
+        placement = Placement(self.spec, stages)
+        perf = estimate(self.spec, placement, self.s_in, self.s_out)
+        return SearchResult(placement, best.score, perf.batch,
+                            perf.throughput_rps, wall, self.evaluated)
+
+
+def exhaustive_search(spec: ModelSpec, inventory: Dict[str, int],
+                      instances: Dict[str, InstanceProfile], s_in: int,
+                      s_out: int, objective: Optional[Objective] = None,
+                      max_stages: int = 4) -> SearchResult:
+    """Brute-force reference used by tests on tiny problems (the paper's
+    'intractable exhaustive search' — only viable for a handful of layers)."""
+    objective = objective or Objective()
+    opts = stage_options_for([instances[n] for n in inventory])
+    inv = {n: c * instances[n].num_devices for n, c in inventory.items()}
+    n_l = spec.n_layers
+    best, best_score = None, -1.0
+    evaluated = 0
+    t0 = time.perf_counter()
+
+    def partitions(n, k):
+        if k == 1:
+            yield (n,)
+            return
+        for first in range(1, n - k + 2):
+            for rest in partitions(n - first, k - 1):
+                yield (first,) + rest
+
+    for k in range(1, max_stages + 1):
+        for part in partitions(n_l, k):
+            for combo in itertools.product(opts, repeat=k):
+                used: Dict[str, int] = {}
+                ok = True
+                for o in combo:
+                    used[o.instance.name] = used.get(o.instance.name, 0) + o.tp
+                    if used[o.instance.name] > inv.get(o.instance.name, 0):
+                        ok = False
+                        break
+                if not ok:
+                    continue
+                stages = tuple(
+                    Stage(o.instance, o.tp, nl, first=(i == 0),
+                          last=(i == k - 1))
+                    for i, (o, nl) in enumerate(zip(combo, part)))
+                placement = Placement(spec, stages)
+                perf = estimate(spec, placement, s_in, s_out)
+                evaluated += 1
+                sc = objective.score(placement, perf)
+                if sc > best_score:
+                    best, best_score = placement, sc
+    wall = time.perf_counter() - t0
+    if best is None:
+        return SearchResult(None, 0.0, 0, 0.0, wall, evaluated)
+    perf = estimate(spec, best, s_in, s_out)
+    return SearchResult(best, best_score, perf.batch, perf.throughput_rps,
+                        wall, evaluated)

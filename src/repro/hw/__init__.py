@@ -1,0 +1,10 @@
+from repro.hw.profiles import (ALL_INSTANCES, AWS_INSTANCES, TPU_INSTANCES,
+                               DeviceProfile, InstanceProfile, effective,
+                               get_instance, paper_cluster)
+from repro.hw.calibration import CalibrationResult, calibrate
+
+__all__ = [
+    "ALL_INSTANCES", "AWS_INSTANCES", "TPU_INSTANCES", "DeviceProfile",
+    "InstanceProfile", "effective", "get_instance", "paper_cluster",
+    "CalibrationResult", "calibrate",
+]

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the serving hot spots (DESIGN.md §8):
+#   flash_attention.py  — prefill attention (online softmax, causal/SWA, GQA)
+#   decode_attention.py — single-token GQA decode vs a contiguous KV cache
+#   ssd_scan.py         — Mamba2 SSD chunked scan
+# ops.py — jit'd dispatch (interpret=True on CPU); ref.py — pure-jnp oracles.

@@ -1,0 +1,103 @@
+"""GQA decode attention Pallas TPU kernel (single new token vs KV cache).
+
+The TPU-native replacement for paged-attention-style CUDA decode kernels:
+the cache stays contiguous (page tables suit GPU SMEM gathers, not TPU DMA
+engines); per-sequence validity comes from a position vector, masked while
+KV blocks stream through VMEM with a running-softmax accumulator in scratch.
+Memory-bound by design — the roofline term is the cache scan.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                *, scale: float, window: Optional[int], block_kv: int,
+                n_kv_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0, :].astype(jnp.float32)              # (d,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bkv, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # (bkv,)
+
+    pos = pos_ref[0]
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_kv,), 0)
+    mask = k_pos <= pos
+    if window is not None:
+        mask &= k_pos > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)            # (bkv,)
+    l_scr[0] = l_scr[0] * alpha + jnp.sum(p)
+    acc_scr[0, :] = (acc_scr[0, :] * alpha
+                     + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_scr[0] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _out():
+        denom = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0, 0, :] = (acc_scr[0, :] / denom).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                     pos: jax.Array, *, window: Optional[int] = None,
+                     block_kv: int = 128, interpret: bool = False
+                     ) -> jax.Array:
+    """q: (B,1,nh,d); cache_k/v: (B,S,nkv,d); pos scalar or (B,) — the
+    position of the current (already written) token per sequence."""
+    b, _, nh, d = q.shape
+    s, nkv = cache_k.shape[1], cache_k.shape[2]
+    assert nh % nkv == 0
+    g = nh // nkv
+    block_kv = min(block_kv, s)
+    assert s % block_kv == 0, (s, block_kv)
+    nk = s // block_kv
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    pos = pos.astype(jnp.int32)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, window=window,
+                               block_kv=block_kv, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nh, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,)),
+            pl.BlockSpec((1, 1, 1, d), lambda ib, ih, ik: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda ib, ih, ik, g=g: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda ib, ih, ik, g=g: (ib, ik, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda ib, ih, ik: (ib, 0, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1, nh, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, cache_k, cache_v)

@@ -1,0 +1,116 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Online-softmax tiling over (block_q x block_kv) with explicit BlockSpec VMEM
+placement, causal + sliding-window masking, GQA via head->kv-head mapping in
+the index maps. The KV-block loop is the innermost grid dimension: TPU
+executes it sequentially per (batch, head, q-block), so the running max /
+denominator / accumulator live in VMEM scratch across iterations — the
+standard Pallas accumulation pattern (a TPU-native re-think of the CUDA
+flash kernel: DMA-prefetched VMEM tiles + MXU matmuls instead of SMEM tiles
++ warp shuffles).
+
+MXU alignment: block_q/block_kv default 128, head_dim padded to 128 by the
+wrapper (ops.py) when needed.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: Optional[int],
+               block_q: int, block_kv: int, n_kv_blocks: int):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bkv, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (block_q, block_kv), 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (bq,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p, v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_scr[...] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _out():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,Sq,nh,d), k/v: (B,Sk,nkv,d) -> (B,Sq,nh,d)."""
+    b, sq, nh, d = q.shape
+    sk, nkv = k.shape[1], k.shape[2]
+    assert nh % nkv == 0, (nh, nkv)
+    g = nh // nkv
+    block_q = min(block_q, sq)
+    block_kv = min(block_kv, sk)
+    assert sq % block_q == 0 and sk % block_kv == 0, (sq, sk)
+    nq, nk = sq // block_q, sk // block_kv
+    grid = (b, nh, nq, nk)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda ib, ih, iq, ik, g=g: (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda ib, ih, iq, ik, g=g: (ib, ik, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, d),
+                               lambda ib, ih, iq, ik: (ib, iq, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, nh, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

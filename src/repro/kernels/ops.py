@@ -1,0 +1,56 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes in Python for correctness validation. On TPU they compile to
+Mosaic. Models call these through ``use_pallas=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import decode_attention as _da
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_kv: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=_interpret())
+
+
+def decode_attention(q, cache_k, cache_v, pos, slot_pos=None, *,
+                     window: Optional[int] = None, block_kv: int = 128):
+    """Matches models.attention.decode_attention's signature; ring caches
+    (slot_pos) fall back to the jnp path — the kernel serves linear caches."""
+    if slot_pos is not None:
+        from repro.models.attention import decode_attention as jref
+        return jref(q, cache_k, cache_v, pos, slot_pos, window=window)
+    return _decode_jit(q, cache_k, cache_v, pos, window=window,
+                       block_kv=block_kv)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_kv"))
+def _decode_jit(q, cache_k, cache_v, pos, *, window, block_kv):
+    return _da.decode_attention(q, cache_k, cache_v, pos, window=window,
+                                block_kv=min(block_kv, cache_k.shape[1]),
+                                interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a, b, c, chunk: int = 64) -> Tuple[jax.Array, jax.Array]:
+    return _ssd.ssd_scan(x, dt, a, b, c, chunk=chunk,
+                         interpret=_interpret())

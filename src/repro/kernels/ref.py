@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (B,Sq,nh,d), k/v: (B,Sk,nkv,d) -> (B,Sq,nh,d). GQA by head
+    grouping; causal assumes q and k start at position 0."""
+    from repro.models.attention import causal_mask, sdpa
+    mask = causal_mask(q.shape[1], k.shape[1], 0, window) if causal else None
+    return sdpa(q, k, v, mask)
+
+
+def decode_attention_ref(q: jax.Array, cache_k: jax.Array,
+                         cache_v: jax.Array, pos: jax.Array,
+                         window: Optional[int] = None) -> jax.Array:
+    """q: (B,1,nh,d) vs linear cache (B,S,nkv,d); pos scalar or (B,)."""
+    from repro.models.attention import decode_attention
+    return decode_attention(q, cache_k, cache_v, pos, None, window=window)
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                 c: jax.Array, chunk: int = 64
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD: x (B,S,nh,hd), dt (B,S,nh) (post-softplus), a (nh,)<0,
+    b/c (B,S,N). Returns (y, final state (B,nh,hd,N) fp32)."""
+    from repro.models.ssm import ssd_chunked
+    return ssd_chunked(x, dt, a, b, c, chunk=chunk)
+
+
+def ssd_scan_sequential_ref(x, dt, a, b, c):
+    """O(S) sequential recurrence — the independent second oracle that the
+    chunked algorithm itself is validated against."""
+    from repro.models.ssm import ssd_step
+    B, S, nh, hd = x.shape
+    n = b.shape[-1]
+    h = jnp.zeros((B, nh, hd, n), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, h = ssd_step(x[:, t], dt[:, t], a, b[:, t], c[:, t], h)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), h

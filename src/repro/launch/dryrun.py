@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost analysis + collective bytes.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape decode_32k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both \
+      --out results/dryrun.json
+
+Per cell we record:
+  * compiled memory_analysis (bytes per device: args/outputs/temps/peak)
+  * compiled cost_analysis  (HLO FLOPs / bytes accessed)
+  * collective bytes parsed from HLO (trip-count weighted — hlo_utils)
+  * wall times (lower / compile)
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import REGISTRY, get_config
+from repro.configs.shapes import ALL_SHAPES, shapes_for
+from repro.launch import hlo_costs, hlo_utils
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, lower_step
+
+
+def _mem_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not support it
+        return {"error": repr(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes", "host_argument_size_in_bytes",
+              "peak_memory_in_bytes"):
+        if hasattr(ma, k):
+            out[k] = int(getattr(ma, k))
+    return out or {"repr": repr(ma)}
+
+
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": repr(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             serve_pp: bool = False, keep_hlo: bool = False,
+             extra_rules: Optional[Dict] = None) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "step": shape.step,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "serve_pp": bool(serve_pp and multi_pod),
+    }
+    t0 = time.perf_counter()
+    built = build_step(cfg, shape, mesh, serve_pp=serve_pp,
+                       extra_rules=extra_rules)
+    lowered = lower_step(built, mesh)
+    rec["lower_s"] = round(time.perf_counter() - t0, 2)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.perf_counter() - t1, 2)
+    rec["memory_analysis"] = _mem_analysis_dict(compiled)
+    rec["cost_analysis"] = _cost_analysis_dict(compiled)
+    hlo = compiled.as_text()
+    rec["collectives"] = hlo_utils.collective_bytes(
+        hlo, trip_hints=built.trip_hints)
+    # trip-weighted per-device flops/bytes (cost_analysis counts while
+    # bodies once — see launch/hlo_costs.py)
+    rec["tw_costs"] = hlo_costs.trip_weighted_costs(
+        hlo, trip_hints=built.trip_hints)
+    rec["trip_hints"] = list(built.trip_hints)
+    rec["meta"] = {k: v for k, v in built.meta.items() if k != "rules"}
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+    print(f"[dryrun] {arch} x {shape_name} on {rec['mesh']}"
+          f"{' (PP)' if rec['serve_pp'] else ''}: "
+          f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+    ma = rec["memory_analysis"]
+    print("  memory_analysis:", json.dumps(ma))
+    ca = rec["cost_analysis"]
+    print(f"  cost_analysis: flops={ca.get('flops', float('nan')):.3e} "
+          f"bytes={ca.get('bytes accessed', float('nan')):.3e}")
+    print(f"  trip-weighted: flops={rec['tw_costs']['flops']:.3e} "
+          f"bytes={rec['tw_costs']['bytes']:.3e}")
+    print(f"  collective bytes (trip-weighted): "
+          f"{rec['collectives'].get('total', 0):.3e}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x applicable shape) cell")
+    ap.add_argument("--serve-pp", action="store_true",
+                    help="multi-pod serving uses pipeline parallelism over "
+                         "the pod axis (paper-faithful) when supported")
+    ap.add_argument("--out", default=None, help="append JSON records here")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for name, cfg in REGISTRY.items():
+            for sh in shapes_for(cfg):
+                cells.append((name, sh.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    records, failures = [], []
+    for arch, shape_name in cells:
+        for multi in meshes:
+            pp = args.serve_pp and multi
+            if pp:
+                from repro.launch.pipeline import pp_supported
+                cfg = get_config(arch)
+                shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+                pp = pp_supported(cfg) and shape.step == "serve_step"
+            try:
+                records.append(run_cell(arch, shape_name, multi,
+                                        serve_pp=pp))
+            except Exception as e:
+                traceback.print_exc()
+                failures.append({"arch": arch, "shape": shape_name,
+                                 "mesh": "multi" if multi else "single",
+                                 "error": repr(e)})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump({"records": records, "failures": failures}, f,
+                          indent=1)
+    print(f"\n[dryrun] {len(records)} cells OK, {len(failures)} failed")
+    if failures:
+        for f_ in failures:
+            print("  FAIL:", f_)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,207 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimbing driver (§Perf): hypothesis -> change -> re-lower ->
+re-analyze, per cell. Each variant names an optimization lever; the record
+stores the three roofline terms before/after so EXPERIMENTS.md can report
+confirmed/refuted hypotheses.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --cell qwen3_train
+"""
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.shapes import ALL_SHAPES
+from repro.launch import hlo_costs, hlo_utils
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (V5E_HBM_BPS, V5E_ICI_BPS, V5E_PEAK_FLOPS,
+                                   analytic_min_bytes, model_flops_for,
+                                   n_chips)
+from repro.launch.steps import build_step, lower_step
+
+
+def measure(arch: str, shape_name: str, multi_pod: bool = False,
+            **kw) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = n_chips(mesh_name)
+    t0 = time.perf_counter()
+    built = build_step(cfg, shape, mesh, **kw)
+    compiled = lower_step(built, mesh).compile()
+    wall = time.perf_counter() - t0
+    hlo = compiled.as_text()
+    coll = hlo_utils.collective_bytes(hlo, built.trip_hints)
+    tw = hlo_costs.trip_weighted_costs(hlo, built.trip_hints)
+    ca = compiled.cost_analysis() or {}
+    analytic = analytic_min_bytes(arch, shape_name) / chips
+    hbm = max(float(ca.get("bytes accessed", 0.0)), analytic)
+    mf = model_flops_for(arch, shape_name)
+    terms = {
+        "compute_s": tw["flops"] / V5E_PEAK_FLOPS,
+        "memory_s": hbm / V5E_HBM_BPS,
+        "collective_s": coll["total"] / V5E_ICI_BPS,
+    }
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    ideal = max(mf / (chips * V5E_PEAK_FLOPS), analytic / V5E_HBM_BPS)
+    ma = compiled.memory_analysis()
+    return {
+        **terms,
+        "dominant": dominant,
+        "total_s": total,
+        "roofline_fraction": min(1.0, ideal / total) if total else 0.0,
+        "collectives_by_kind": {k: v for k, v in coll.items()
+                                if k not in ("counts",)},
+        "peak_mem_gb": getattr(ma, "peak_memory_in_bytes", 0) / 1e9,
+        "compile_wall_s": wall,
+        "meta": {k: v for k, v in built.meta.items() if k != "rules"},
+    }
+
+
+# ---------------------------------------------------------------------------
+# The three hillclimbed cells. Each variant: (name, hypothesis, kwargs).
+# ---------------------------------------------------------------------------
+CELLS: Dict[str, Dict[str, Any]] = {
+    # most collective-bound cell
+    "qwen3_train": {
+        "arch": "qwen3-32b", "shape": "train_4k", "multi_pod": False,
+        "variants": [
+            ("baseline", "paper-faithful FSDP(data) x TP(model), remat, "
+             "grad-accum microbatches", {}),
+            ("gather_once",
+             "HYPOTHESIS: the collective term is dominated by per-microbatch "
+             "re-all-gathers of FSDP weight shards inside the accumulation "
+             "scan (fwd+remat bwd => 2x per microbatch x16). Re-constraining "
+             "weights to TP-only layout once per step should cut all-gather "
+             "bytes ~16x at the cost of +weights/16 resident memory.",
+             {"gather_weights_once": True}),
+            ("gather_once_mb8",
+             "HYPOTHESIS: with gathers hoisted, the activation all-reduce "
+             "(Eq.3 term) dominates; fewer+larger microbatches don't change "
+             "AR bytes but halve scan overhead collectives.",
+             {"gather_weights_once": True, "n_microbatches": 8}),
+            ("gather_once_save_ar",
+             "HYPOTHESIS (iter 2): plain remat re-executes the forward TP "
+             "all-reduces during the backward pass; a checkpoint policy "
+             "that saves post-collective block outputs should cut the "
+             "collective term another ~25-30% for ~2x activation memory "
+             "(peak was 1.3GB — headroom is ample).",
+             {"gather_weights_once": True,
+              "remat_policy": "save_block_out"}),
+        ],
+    },
+    # worst roofline fraction cell
+    "granite_prefill": {
+        "arch": "granite-moe-3b-a800m", "shape": "prefill_32k",
+        "multi_pod": False,
+        "variants": [
+            ("baseline", "MoE dispatch with token-major cumsum + capacity "
+             "scatter; experts replicated (40 % 16 != 0)", {}),
+            ("seq_shard",
+             "HYPOTHESIS: dispatch tensors (T,E one-hot cumsum, T*k gathers) "
+             "are sharded only over data; spreading the token axis over "
+             "model too (sequence sharding) cuts the per-chip dispatch "
+             "traffic ~16x, at the price of attention-side gathers.",
+             {"extra_rules": {"seq": ("model",)}}),
+            ("expert_cap_shard",
+             "HYPOTHESIS: the (E, C, H) expert buffers replicate over the "
+             "model axis; sharding the capacity dim over model cuts the "
+             "expert-matmul gather traffic without touching attention.",
+             {"extra_rules": {"moe_cap": ("model",)}}),
+            ("cap_plus_seq",
+             "HYPOTHESIS (iter 2): capacity sharding cut expert-side "
+             "traffic 24%; sequence sharding cut peak memory 7x but left "
+             "collectives flat. Composed, the dispatch tensors shard over "
+             "both axes — expect compounding on the collective term.",
+             {"extra_rules": {"moe_cap": ("model",),
+                              "seq": ("model",)}}),
+        ],
+    },
+    # most representative of the paper's technique (decode serving)
+    "qwen3_decode": {
+        "arch": "qwen3-32b", "shape": "decode_32k", "multi_pod": False,
+        "variants": [
+            ("baseline", "TP(model) x DP(data) decode, bf16 KV cache", {}),
+            ("kv_f8",
+             "HYPOTHESIS: decode is HBM-bound on the KV scan; storing the "
+             "cache in f8 (e4m3) halves cache bytes => memory term drops "
+             "toward the weight-scan floor.",
+             {"kv_cache_dtype": "float8_e4m3fn"}),
+            ("kv_f8_w_f8",
+             "HYPOTHESIS (iter 2): with the cache halved, the weight scan "
+             "is the next memory driver; f8-stored weights (upcast fused "
+             "into consumers) halve it too — memory term -> ~0.5x again.",
+             {"kv_cache_dtype": "float8_e4m3fn",
+              "weight_dtype": "float8_e4m3fn"}),
+        ],
+    },
+    # the paper's own mechanism across pods (multi-pod serving)
+    "llama_decode_pp": {
+        "arch": "llama-3.1-70b", "shape": "decode_32k", "multi_pod": True,
+        "variants": [
+            ("dp_over_pods", "replicate the pipeline across pods (the "
+             "optimizer's choice for small models)", {}),
+            ("pp_over_pods",
+             "HYPOTHESIS: the paper's PP-across-instances mechanism halves "
+             "per-chip weight residency/scan (layers split across pods) and "
+             "replaces DCN all-reduce with one ppermute hop per microbatch.",
+             {"serve_pp": True}),
+            ("pp_plus_kvf8",
+             "HYPOTHESIS: PP + f8 KV cache compound — memory term drops to "
+             "~0.5x of PP alone.",
+             {"serve_pp": True, "kv_cache_dtype": "float8_e4m3fn"}),
+        ],
+    },
+}
+
+
+def run_cell(name: str) -> List[Dict[str, Any]]:
+    cell = CELLS[name]
+    out = []
+    for vname, hypothesis, kw in cell["variants"]:
+        print(f"[hillclimb] {name}/{vname} ...", flush=True)
+        try:
+            m = measure(cell["arch"], cell["shape"],
+                        multi_pod=cell.get("multi_pod", False), **kw)
+            rec = {"cell": name, "variant": vname,
+                   "hypothesis": hypothesis, **m}
+        except Exception as e:  # record refuted-by-crash variants too
+            import traceback
+            traceback.print_exc()
+            rec = {"cell": name, "variant": vname,
+                   "hypothesis": hypothesis, "error": repr(e)}
+        out.append(rec)
+        if "total_s" in rec:
+            print(f"  compute={rec['compute_s']:.4g}s "
+                  f"memory={rec['memory_s']:.4g}s "
+                  f"collective={rec['collective_s']:.4g}s "
+                  f"dominant={rec['dominant']} "
+                  f"frac={rec['roofline_fraction']:.4f}", flush=True)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS) + [None])
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+    cells = [args.cell] if args.cell else list(CELLS)
+    records = []
+    for c in cells:
+        records.extend(run_cell(c))
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    print(f"[hillclimb] wrote {len(records)} records to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

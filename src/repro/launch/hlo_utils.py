@@ -1,0 +1,183 @@
+"""HLO text analysis: collective traffic for the roofline collective term.
+
+``compiled.cost_analysis()`` has FLOPs and bytes but NOT collective traffic,
+so we parse the post-SPMD-partitioner HLO and account every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Two subtleties handled here:
+
+1. Compiled CPU HLO references operands by name (no inline operand types),
+   so sizes come from the op's *output* shape — which after partitioning is
+   the PER-DEVICE shape — converted to per-chip ring wire bytes:
+       all-reduce:        2 * N * (P-1)/P      (N = per-device bytes)
+       all-gather:            N * (P-1)/P      (N = gathered output bytes)
+       reduce-scatter:    N_out * (P-1)        (operand = out * P)
+       all-to-all:            N * (P-1)/P
+       collective-permute:    N                (one hop)
+   P is parsed from replica_groups (iota ``[G,P]<=...`` or explicit).
+
+2. Scan-over-layers lowers to ``while`` ops whose bodies appear once in the
+   text but execute trip-count times. We walk computations from ENTRY with
+   multiplicities; ``trip_hints`` supplies static trip counts by while-loop
+   nesting depth (e.g. ``[n_microbatches, n_layers]`` for an accumulating
+   train step).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+# computation headers look like "%region_1.2_spmd (param: (s32[], ...)) ->
+# (...) {" — params may nest parens, so match loosely and require the line to
+# open a block and not be an instruction (" = ").
+_COMP_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%([\w.\-]+)\s*\(.*\{\s*$")
+_REF_SINGLE_RE = re.compile(
+    r"\b(body|condition|to_apply|calls)=%([\w.\-]+)")
+_REF_LIST_RE = re.compile(
+    r"\b(branch_computations|called_computations|calls)=\{([^}]*)\}")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _participants(line: str, default: int = 2) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return default
+
+
+def _line_collective(line: str) -> Optional[Tuple[str, float, float]]:
+    """Returns (kind, wire_bytes_per_chip, raw_output_bytes) or None."""
+    m = _OP_RE.search(line)
+    if not m or m.group(3) == "-done":
+        return None
+    kind = m.group(2)
+    out_seg = m.group(1)
+    out_bytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(out_seg))
+    if kind == "collective-permute":
+        return kind, float(out_bytes), float(out_bytes)
+    p = _participants(line)
+    if p <= 1:
+        return kind, 0.0, float(out_bytes)
+    if kind == "all-reduce":
+        wire = 2.0 * out_bytes * (p - 1) / p
+    elif kind == "all-gather":
+        wire = out_bytes * (p - 1) / p
+    elif kind == "reduce-scatter":
+        wire = float(out_bytes) * (p - 1)
+    else:  # all-to-all
+        wire = out_bytes * (p - 1) / p
+    return kind, wire, float(out_bytes)
+
+
+class _Comp:
+    def __init__(self, name):
+        self.name = name
+        self.coll: Dict[str, float] = defaultdict(float)
+        self.raw: Dict[str, float] = defaultdict(float)
+        self.counts: Dict[str, int] = defaultdict(int)
+        self.while_bodies: List[str] = []
+        self.plain_refs: List[str] = []
+
+
+def _parse(hlo_text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    # headerless fragments (tests, partial dumps) land in an implicit
+    # top-level computation; it is only counted when no ENTRY exists.
+    cur: Optional[_Comp] = comps.setdefault("<toplevel>",
+                                            _Comp("<toplevel>"))
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if " = " not in line.split("(", 1)[0]:
+            header = _COMP_HEADER_RE.match(line)
+            if header:
+                name = header.group(2)
+                cur = comps.setdefault(name, _Comp(name))
+                if header.group(1):
+                    entry = name
+                continue
+        if cur is None:
+            continue
+        got = _line_collective(line)
+        if got:
+            kind, wire, raw = got
+            cur.coll[kind] += wire
+            cur.raw[kind] += raw
+            cur.counts[kind] += 1
+        for attr, nm in _REF_SINGLE_RE.findall(line):
+            if attr == "body":
+                cur.while_bodies.append(nm)
+            else:
+                cur.plain_refs.append(nm)
+        for _attr, names in _REF_LIST_RE.findall(line):
+            cur.plain_refs.extend(_NAME_RE.findall(names))
+    return comps, entry
+
+
+def collective_bytes(hlo_text: str,
+                     trip_hints: Sequence[int] = ()) -> Dict[str, float]:
+    """Trip-count-weighted per-chip collective wire bytes by kind + total."""
+    comps, entry = _parse(hlo_text)
+    totals: Dict[str, float] = defaultdict(float)
+    raws: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, float] = defaultdict(float)
+
+    def accumulate(comp: _Comp, mult: float):
+        for k, v in comp.coll.items():
+            totals[k] += v * mult
+            raws[k] += comp.raw[k] * mult
+            counts[k] += comp.counts[k] * mult
+
+    if entry is None:
+        for c in comps.values():
+            accumulate(c, 1.0)
+    else:
+        stack: List[str] = []
+
+        def walk(name: str, mult: float, depth: int):
+            comp = comps.get(name)
+            if comp is None or name in stack:
+                return
+            stack.append(name)
+            accumulate(comp, mult)
+            for ref in comp.plain_refs:
+                walk(ref, mult, depth)
+            for body in comp.while_bodies:
+                trip = trip_hints[depth] if depth < len(trip_hints) else 1
+                walk(body, mult * max(1, trip), depth + 1)
+            stack.pop()
+
+        walk(entry, 1.0, 0)
+    out = {k: float(v) for k, v in totals.items()}
+    out["total"] = float(sum(totals.values()))
+    out["raw_output_bytes"] = float(sum(raws.values()))
+    out["counts"] = {k: float(v) for k, v in counts.items()}  # type: ignore
+    return out

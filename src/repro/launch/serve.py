@@ -1,0 +1,83 @@
+"""Serving driver: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Places the model on a (simulated or declared) cluster with the ShuntServe
+optimizer, builds real engines per pipeline, serves a batched workload with
+continuous batching, and optionally injects a spot interruption to exercise
+output-preserving migration + concurrent initialization.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import Objective, populate_cluster
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+from repro.models import build_model
+from repro.serving import GlobalServer, ServeRequest, TensorStore
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new-tokens", type=int, default=12)
+    ap.add_argument("--interrupt-at", type=int, default=-1,
+                    help="scheduling round to interrupt an instance at")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    exec_cfg = cfg.reduced() if args.reduced else cfg
+    # control plane: ShuntServe placement for the FULL model on the paper's
+    # cluster (what would run in production)
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    plan = populate_cluster(cfg.to_modelspec(), paper_cluster(), insts,
+                            763, 232, beam_k=1)
+    print(f"[serve] placement for {cfg.name}: {len(plan.pipelines)} "
+          f"pipelines, est {plan.total_rps:.2f} rps")
+    for p in plan.pipelines:
+        print("   ", p.describe())
+
+    # data plane: real engines on reduced config (CPU container)
+    model = build_model(exec_cfg, remat=False, attn_chunk=0)
+    params = model.init(jax.random.PRNGKey(0))
+    store = TensorStore()
+    srv = GlobalServer(exec_cfg, store, max_batch=4, max_len=96)
+    weights = plan.weights() or [1.0]
+    for i, w in enumerate(weights[:2] or [1.0]):
+        srv.add_pipeline(params, [f"inst-{i}-a", f"inst-{i}-b"], weight=w)
+    rng = np.random.RandomState(0)
+    reqs = [ServeRequest(
+        prompt=rng.randint(0, exec_cfg.vocab, size=rng.randint(3, 8)).tolist(),
+        max_new_tokens=args.max_new_tokens) for _ in range(args.requests)]
+    for r in reqs:
+        srv.submit(r)
+    t0 = time.perf_counter()
+    rounds = 0
+    while any(p.queue or p.engine.active() for p in srv.pipelines):
+        if rounds == args.interrupt_at:
+            print(f"[serve] interrupting inst-0-a at round {rounds}")
+            srv.interrupt_instance("inst-0-a")
+        srv.step()
+        srv.clock += 0.01
+        rounds += 1
+        if rounds > 50_000:
+            break
+    dt = time.perf_counter() - t0
+    done = [r for r in reqs if r.done]
+    toks = sum(len(r.generated) for r in done)
+    migrated = sum(1 for r in reqs if r.migrations)
+    print(f"[serve] {len(done)}/{len(reqs)} requests, {toks} tokens in "
+          f"{dt:.1f}s ({toks/dt:.1f} tok/s), {migrated} migrated, "
+          f"{rounds} rounds")
+
+
+if __name__ == "__main__":
+    main()

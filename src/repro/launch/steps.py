@@ -1,0 +1,266 @@
+"""Step builders: (arch x shape x mesh) -> jitted-and-shardable step fns.
+
+Every (architecture x input shape) cell resolves to one of:
+  * train_step(state, batch)           (train_4k)
+  * prefill_step(params, inputs)       (prefill_32k)
+  * serve_step(params, cache, tokens)  (decode_32k / long_500k)
+
+with in_shardings derived from the logical-axis rule tables. Multi-pod mode
+runs DP over the pod axis for train (gradient all-reduce across DCN) and,
+for serving, either DP replication over pods or the paper-faithful
+pipeline-parallel split (launch.pipeline) selected by ``serve_pp``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import build_model, input_specs
+from repro.sharding import rules as R
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import (TrainState, choose_microbatches,
+                                    init_train_state, make_train_step,
+                                    train_state_specs)
+
+
+def build_rules(cfg: ArchConfig, mesh: Mesh, train: bool,
+                step: str = "", shape: Optional[ShapeSpec] = None) -> Dict:
+    multipod = "pod" in mesh.shape
+    if train:
+        rules = dict(R.TRAIN_RULES_MULTIPOD if multipod else R.TRAIN_RULES)
+    else:
+        rules = dict(R.INFER_RULES_MULTIPOD if multipod else R.INFER_RULES)
+    model_size = mesh.shape["model"]
+    # Sequence-parallel KV cache: (a) mandatory fallback when KV heads do
+    # not divide the model axis; (b) always for prefill — the cache is
+    # write-only there, so sequence sharding halves peak memory without
+    # introducing softmax-side collectives (the 32k-prefill cells of the
+    # 70B/104B models exceeded the 16GB v5e HBM otherwise).
+    if not train and cfg.n_kv_heads and (
+            cfg.n_kv_heads % model_size != 0 or step == "prefill_step"):
+        rules["cache_seq"] = ("model",)
+    # Sequence-sharded activations for big prefills: when the per-chip
+    # residual stream exceeds ~1GB, shard the seq axis over model too —
+    # drops the 70B/104B 32k-prefill peak from ~30GB to ~14GB (fits v5e)
+    # AND cuts the TP collective term (§Perf).
+    if step == "prefill_step" and shape is not None:
+        data_size = mesh.shape.get("data", 1)
+        act_gb = (shape.global_batch * shape.seq_len * cfg.d_model * 2
+                  / max(1, data_size) / 1e9)
+        if act_gb > 1.0 and shape.seq_len % model_size == 0:
+            rules["seq"] = ("model",)
+    return rules
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                      # python callable (positional args)
+    args_sds: Tuple[Any, ...]    # ShapeDtypeStructs per positional arg
+    in_shardings: Tuple[Any, ...]
+    donate_argnums: Tuple[int, ...]
+    trip_hints: Tuple[int, ...]  # while-loop nesting trip counts (hlo_utils)
+    meta: Dict[str, Any]
+    out_shardings: Any = None    # None => let GSPMD choose
+
+
+def _shardings_for(tree_specs, tree_sds, mesh, rules):
+    def one(names, sds):
+        return NamedSharding(mesh, R.resolve(names, sds.shape, rules, mesh))
+    return jax.tree.map(
+        one, tree_specs, tree_sds,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _batch_specs(batch_sds, cfg: ArchConfig) -> Dict:
+    """Logical names for input batches (leading batch dim; m-rope positions
+    carry (3,B,S))."""
+    def one(path_key, sds):
+        nd = len(sds.shape)
+        if nd >= 2 and sds.shape[0] == 3 and path_key == "positions":
+            return (None, "batch") + (None,) * (nd - 2)
+        return ("batch",) + (None,) * (nd - 1)
+    return {k: one(k, v) for k, v in batch_sds.items()}
+
+
+def n_chips(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n
+
+
+def build_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
+               serve_pp: bool = False, attn_chunk: int = 512,
+               n_microbatches: Optional[int] = None,
+               extra_rules: Optional[Dict] = None,
+               gather_weights_once: bool = False,
+               kv_cache_dtype: Optional[str] = None,
+               weight_dtype: Optional[str] = None,
+               remat_policy: Optional[str] = None) -> BuiltStep:
+    train = shape.step == "train_step"
+    rules = build_rules(cfg, mesh, train, step=shape.step, shape=shape)
+    if extra_rules:
+        rules.update(extra_rules)
+    sharder = R.Sharder(mesh=mesh, rules=rules)
+    model_kw = {}
+    if remat_policy and not cfg.is_encdec:
+        model_kw["remat_policy"] = remat_policy
+    model = build_model(cfg, sharder=sharder, attn_chunk=attn_chunk,
+                        remat=train, **model_kw)
+    pspecs = model.param_specs()
+    pshapes = model.param_shapes()
+    specs = input_specs(cfg, shape)
+
+    # while-loop nesting trip counts for hlo_utils.collective_bytes: the
+    # layer scan (hybrid: group scan x inner period scan) sits below the
+    # optional microbatch-accumulation scan.
+    if cfg.family == "hybrid" and cfg.hybrid_period:
+        layer_hints: Tuple[int, ...] = (cfg.n_layers // cfg.hybrid_period,
+                                        cfg.hybrid_period)
+    else:
+        layer_hints = (cfg.n_layers,)
+
+    if shape.step == "train_step":
+        nm = n_microbatches or choose_microbatches(
+            shape.global_batch, shape.seq_len, cfg.padded_vocab,
+            n_chips(mesh))
+        loss_model = model
+        if gather_weights_once:
+            # Perf lever (§Perf): re-constrain FSDP-sharded weights to their
+            # TP-only (gathered-over-data) layout ONCE per step, outside the
+            # microbatch scan — the scan then closes over loop-invariant
+            # gathered weights instead of re-all-gathering them per
+            # microbatch (fwd + remat'd bwd). Grads reduce-scatter back
+            # through the constraint's transpose.
+            gathered_rules = dict(rules, embed=None)
+
+            class _GatherOnce:
+                loss = None
+                def __getattr__(self, name):
+                    return getattr(model, name)
+
+            def loss_gathered(params, batch):
+                def g(leaf, names):
+                    sh = NamedSharding(mesh, R.resolve(
+                        names, leaf.shape, gathered_rules, mesh))
+                    return jax.lax.with_sharding_constraint(leaf, sh)
+                params2 = jax.tree.map(
+                    g, params, pspecs,
+                    is_leaf=lambda x: isinstance(x, tuple) and all(
+                        isinstance(e, (str, type(None))) for e in x))
+                return model.loss(params2, batch)
+
+            loss_model = _GatherOnce()
+            loss_model.loss = loss_gathered
+        step = make_train_step(loss_model, AdamWConfig(), n_microbatches=nm)
+        state_sds = jax.eval_shape(
+            lambda p: init_train_state(p), pshapes)
+        state_specs = train_state_specs(pspecs)
+        state_sh = _shardings_for(state_specs, state_sds, mesh, rules)
+        batch_sh = _shardings_for(_batch_specs(specs, cfg), specs, mesh,
+                                  rules)
+        return BuiltStep(
+            fn=step,
+            args_sds=(state_sds, specs),
+            in_shardings=(state_sh, batch_sh),
+            donate_argnums=(0,),
+            trip_hints=((nm,) + layer_hints if nm > 1 else layer_hints),
+            meta={"n_microbatches": nm, "rules": rules})
+
+    if shape.step == "prefill_step":
+        def prefill_step(params, inputs):
+            logits, cache = model.prefill(params, inputs,
+                                          max_len=shape.seq_len)
+            return model.sample_greedy(logits), cache
+        param_sh = _shardings_for(pspecs, pshapes, mesh, rules)
+        in_sh = _shardings_for(_batch_specs(specs, cfg), specs, mesh, rules)
+        # pin the output cache sharding: the cache is created inside the
+        # jit, so without out_shardings GSPMD may drop the cache_seq split
+        # and materialize a 16x bigger output (21.3GB -> fits once pinned)
+        cache_out_sds = jax.eval_shape(
+            prefill_step, pshapes, specs)[1]
+        cache_out_sh = _shardings_for(model.cache_specs(), cache_out_sds,
+                                      mesh, rules)
+        tok_out_sh = NamedSharding(mesh, R.resolve(
+            ("batch",), (shape.global_batch,), rules, mesh))
+        return BuiltStep(
+            fn=prefill_step,
+            args_sds=(pshapes, specs),
+            in_shardings=(param_sh, in_sh),
+            donate_argnums=(),
+            trip_hints=layer_hints,
+            meta={"rules": rules},
+            out_shardings=(tok_out_sh, cache_out_sh))
+
+    # serve_step
+    if serve_pp and "pod" in mesh.shape:
+        from repro.launch.pipeline import build_pp_serve_step
+        return build_pp_serve_step(cfg, shape, mesh, rules,
+                                   kv_cache_dtype=kv_cache_dtype)
+
+    qw_dt = None
+    if weight_dtype:
+        qw_dt = {"float8_e4m3fn": jnp.float8_e4m3fn,
+                 "float8_e5m2": jnp.float8_e5m2}[weight_dtype]
+
+    def serve_step(params, cache, tokens):
+        if qw_dt is not None:
+            # f8-stored weights: upcast fuses into consumers (served models
+            # read half the weight bytes per token — §Perf lever)
+            params = jax.tree.map(
+                lambda p: p.astype(model.dtype)
+                if p.dtype == qw_dt else p, params)
+        logits, cache = model.decode_step(params, cache, tokens)
+        nxt = model.sample_greedy(logits)
+        return nxt.astype(jnp.int32), cache
+
+    cache_sds = specs["cache"]
+    if qw_dt is not None:
+        pshapes = jax.tree.map(
+            lambda sds: jax.ShapeDtypeStruct(sds.shape, qw_dt)
+            if sds.dtype == model.dtype and len(sds.shape) >= 2 else sds,
+            pshapes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if kv_cache_dtype:
+        # Perf lever (§Perf): quantized KV cache — halves the decode-phase
+        # HBM scan (the dominant roofline term for serve_step). Stored f8,
+        # upcast on read inside attention (bf16 math unchanged).
+        qdt = {"float8_e4m3fn": jnp.float8_e4m3fn,
+               "float8_e5m2": jnp.float8_e5m2}[kv_cache_dtype]
+        def maybe_q(sds):
+            if sds.dtype == model.dtype and len(sds.shape) >= 5:
+                return jax.ShapeDtypeStruct(sds.shape, qdt)
+            return sds
+        cache_sds = jax.tree.map(maybe_q, cache_sds,
+                                 is_leaf=lambda x: isinstance(
+                                     x, jax.ShapeDtypeStruct))
+    cache_specs = model.cache_specs()
+    param_sh = _shardings_for(pspecs, pshapes, mesh, rules)
+    cache_sh = _shardings_for(cache_specs, cache_sds, mesh, rules)
+    tok_sh = NamedSharding(mesh, R.resolve(
+        ("batch", None), specs["tokens"].shape, rules, mesh))
+    return BuiltStep(
+        fn=serve_step,
+        args_sds=(pshapes, cache_sds, specs["tokens"]),
+        in_shardings=(param_sh, cache_sh, tok_sh),
+        donate_argnums=(1,),
+        trip_hints=layer_hints,
+        meta={"rules": rules})
+
+
+def lower_step(built: BuiltStep, mesh: Mesh):
+    """jit + lower (no device allocation: args are ShapeDtypeStructs)."""
+    kw = {}
+    if built.out_shardings is not None:
+        kw["out_shardings"] = built.out_shardings
+    jitted = jax.jit(built.fn, in_shardings=built.in_shardings,
+                     donate_argnums=built.donate_argnums, **kw)
+    with mesh:
+        return jitted.lower(*built.args_sds)

@@ -1,0 +1,83 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+End-to-end training on the local device set (CPU here, TPU in production):
+data pipeline -> jitted microbatched train_step -> checkpointing -> elastic
+resume. XLA latency-hiding flags for real TPU runs are listed (not set on
+CPU): --xla_tpu_enable_async_collective_fusion
+      --xla_tpu_overlap_compute_collective_tc
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.train import checkpoint as ckpt
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+from repro.models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced config (CPU-friendly)")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, remat=True, attn_chunk=0)
+    params = model.init(jax.random.PRNGKey(0))
+    state = init_train_state(params)
+    n_params = model.param_count()
+    print(f"[train] {cfg.name}: {n_params/1e6:.2f}M params, "
+          f"batch={args.batch} seq={args.seq} micro={args.microbatches}")
+
+    step_fn = jax.jit(make_train_step(
+        model, AdamWConfig(lr=args.lr), n_microbatches=args.microbatches),
+        donate_argnums=(0,))
+    data = SyntheticLM(cfg, DataConfig(args.batch, args.seq))
+
+    start = 0
+    if args.resume and args.ckpt_dir:
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            state = ckpt.restore_checkpoint(args.ckpt_dir, last, state)
+            start = last
+            print(f"[train] resumed from step {last}")
+
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        state, metrics = step_fn(state, batch)
+        if step % max(1, args.steps // 10) == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            tok_s = (step - start + 1) * args.batch * args.seq / dt
+            print(f"  step {step:5d} loss {loss:7.4f} "
+                  f"({tok_s:9.0f} tok/s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save_checkpoint(args.ckpt_dir, step + 1, state)
+    if args.ckpt_dir:
+        ckpt.save_checkpoint(args.ckpt_dir, args.steps, state)
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

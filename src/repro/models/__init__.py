@@ -1,0 +1,5 @@
+from repro.models.api import build_model, input_specs, make_batch
+from repro.models.transformer import LM
+from repro.models.encdec import EncDecLM
+
+__all__ = ["build_model", "input_specs", "make_batch", "LM", "EncDecLM"]

@@ -1,0 +1,118 @@
+"""Model construction + input specs for every (arch x shape) cell.
+
+``build_model(cfg)`` returns the executable model; ``input_specs`` returns
+weak-type-correct ShapeDtypeStruct stand-ins for every model input of a
+given step (no device allocation — the dry-run pattern), and ``make_batch``
+returns small *concrete* random inputs for tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
+from repro.models.common import dtype_of
+from repro.sharding.rules import Sharder
+
+Model = Union[LM, EncDecLM]
+
+
+def build_model(cfg: ArchConfig, sharder: Optional[Sharder] = None,
+                **kw) -> Model:
+    if cfg.is_encdec:
+        kw.pop("ssd_chunk", None)
+        kw.pop("moe_capacity_factor", None)
+        return EncDecLM(cfg, sharder=sharder, **kw)
+    return LM(cfg, sharder=sharder, **kw)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _frontend_embeds(cfg: ArchConfig) -> bool:
+    return cfg.frontend in ("vision_embeds",)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for the given step.
+
+    train_step  -> {"tokens"/"embeds", "targets", "mask"} (+ "tokens" for
+                   enc-dec; "positions" for M-RoPE)
+    prefill_step-> prompt inputs
+    serve_step  -> {"cache": <cache tree>, "tokens": (B,1)}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = dtype_of(cfg.dtype)
+    i32 = jnp.int32
+    if shape.step == "train_step":
+        batch: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            batch["embeds"] = _sds((b, s, cfg.d_model), dt)
+            batch["tokens"] = _sds((b, s), i32)
+        elif _frontend_embeds(cfg):
+            batch["embeds"] = _sds((b, s, cfg.d_model), dt)
+        else:
+            batch["tokens"] = _sds((b, s), i32)
+        if cfg.m_rope:
+            batch["positions"] = _sds((3, b, s), i32)
+        batch["targets"] = _sds((b, s), i32)
+        batch["mask"] = _sds((b, s), jnp.float32)
+        return batch
+    if shape.step == "prefill_step":
+        inputs: Dict[str, Any] = {}
+        if cfg.is_encdec:
+            inputs["embeds"] = _sds((b, s, cfg.d_model), dt)
+            inputs["tokens"] = _sds((b, s), i32)
+        elif _frontend_embeds(cfg):
+            inputs["embeds"] = _sds((b, s, cfg.d_model), dt)
+            if cfg.m_rope:
+                inputs["positions"] = _sds((3, b, s), i32)
+        else:
+            inputs["tokens"] = _sds((b, s), i32)
+        return inputs
+    # serve_step: KV cache of seq_len + one new token. eval_shape keeps the
+    # cache abstract — concretizing it here would allocate terabytes.
+    model = build_model(cfg)
+    if cfg.is_encdec:
+        cache_sds = jax.eval_shape(lambda: model.init_cache(b, s, s_enc=s))
+    else:
+        cache_sds = jax.eval_shape(lambda: model.init_cache(b, s))
+    cache_sds = jax.tree.map(lambda a: _sds(a.shape, a.dtype), cache_sds)
+    return {"cache": cache_sds, "tokens": _sds((b, 1), i32)}
+
+
+def make_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0
+               ) -> Dict[str, Any]:
+    """Small concrete random batch matching ``input_specs`` (tests only)."""
+    rng = np.random.RandomState(seed)
+    specs = input_specs(cfg, shape)
+
+    def concretize(sds):
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            hi = cfg.vocab if sds.shape[-1:] != (1,) else cfg.vocab
+            return jnp.asarray(
+                rng.randint(0, min(hi, cfg.vocab), size=sds.shape), sds.dtype)
+        return jnp.asarray(rng.randn(*sds.shape), jnp.float32).astype(
+            sds.dtype)
+
+    out = jax.tree.map(concretize, specs,
+                       is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    if shape.step == "serve_step":
+        # a serve cache "of seq_len": position points at the final slot
+        out["cache"]["pos"] = jnp.array(shape.seq_len - 1, jnp.int32)
+    if shape.step == "train_step" and "mask" in out:
+        out["mask"] = jnp.ones_like(out["mask"])
+    if "positions" in out and shape.step != "serve_step":
+        b, s = shape.global_batch, shape.seq_len
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        out["positions"] = jnp.broadcast_to(pos[None], (3, b, s)).astype(
+            jnp.int32)
+    return out

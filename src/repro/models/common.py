@@ -1,0 +1,210 @@
+"""Shared model building blocks: norms, RoPE / M-RoPE, embeddings, schema-
+driven parameter initialization with logical sharding names.
+
+Parameters are plain pytrees (nested dicts of jnp arrays). Each module
+defines a *schema*: ``{path: ParamDef(shape, logical_names, init)}``; the
+same schema yields (a) initialized arrays, (b) a same-structure tree of
+logical-name tuples for ``sharding.rules.tree_shardings``, and (c)
+ShapeDtypeStructs for allocation-free dry-runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    names: Tuple[Optional[str], ...]
+    init: str = "normal"         # normal | zeros | ones | small_normal |
+    #                              mamba_dt | mamba_alog
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.names), (self.shape, self.names)
+
+
+Schema = Dict[str, "SchemaNode"]  # nested dict of ParamDef
+
+
+def stack_schema(schema: Dict, n: int) -> Dict:
+    """Prepend a scanned layer dimension to every ParamDef in a schema."""
+    out = {}
+    for k, v in schema.items():
+        if isinstance(v, dict):
+            out[k] = stack_schema(v, n)
+        else:
+            out[k] = ParamDef((n,) + v.shape, ("layers",) + v.names,
+                              v.init, v.scale)
+    return out
+
+
+def _init_array(key, d: ParamDef, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "mamba_dt":
+        # dt bias so softplus(dt_bias) spans [1e-3, 1e-1]
+        u = jax.random.uniform(key, d.shape, jnp.float32)
+        dt = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(dtype)
+    if d.init == "mamba_alog":
+        n = d.shape[-1] if d.shape else 1
+        a = jnp.linspace(1.0, 16.0, num=int(np.prod(d.shape)) or 1)
+        return jnp.log(a).reshape(d.shape).astype(dtype)
+    scale = d.scale if d.init == "normal" else d.scale * 0.25
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(schema: Dict, key: jax.Array, dtype) -> Dict:
+    flat = jax.tree_util.tree_leaves_with_path(
+        schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, max(1, len(flat)))
+    leaf_map = {jax.tree_util.keystr(p): k for (p, _), k in zip(flat, keys)}
+
+    def build(path, node):
+        if isinstance(node, ParamDef):
+            return _init_array(leaf_map[path], node, dtype)
+        return {k: build(path + f"['{k}']", v) for k, v in node.items()}
+
+    return build("", schema)
+
+
+def schema_specs(schema: Dict):
+    """Logical-name tree (leaves are tuples of names)."""
+    def walk(node):
+        if isinstance(node, ParamDef):
+            return node.names
+        return {k: walk(v) for k, v in node.items()}
+    return walk(schema)
+
+
+def schema_shapes(schema: Dict, dtype) -> Dict:
+    def walk(node):
+        if isinstance(node, ParamDef):
+            return jax.ShapeDtypeStruct(node.shape, dtype)
+        return {k: walk(v) for k, v in node.items()}
+    return walk(schema)
+
+
+def param_count(schema: Dict) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        schema, is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return lambda x, p: rms_norm(x, p["w"])
+    return lambda x, p: layer_norm(x, p["w"], p.get("b"))
+
+
+def norm_schema(kind: str, dim: int) -> Dict:
+    s = {"w": ParamDef((dim,), ("embed",), "ones")}
+    if kind == "layernorm":
+        s["b"] = ParamDef((dim,), ("embed",), "zeros")
+    return s
+
+
+def activation(kind: str) -> Callable[[jax.Array], jax.Array]:
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[kind]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    half = x.shape[-1] // 2
+    freqs = rope_frequencies(x.shape[-1], theta)          # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                      # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x: jax.Array, positions3: jax.Array, theta: float,
+                 sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency slots are split
+    into (temporal, height, width) sections, each rotated by its own position
+    stream.
+
+    x: (B, S, n, d); positions3: (3, B, S) int — for text tokens the three
+    streams are identical, recovering standard RoPE.
+    """
+    if theta <= 0:
+        return x
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_frequencies(x.shape[-1], theta)          # (half,)
+    # (3, B, S, half)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs
+    chunks = []
+    off = 0
+    for i, sec in enumerate(sections):
+        chunks.append(ang_all[i, ..., off:off + sec])
+        off += sec
+    ang = jnp.concatenate(chunks, axis=-1)                # (B, S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, dim: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (built lazily)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    i = jnp.arange(dim // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float16": jnp.float16,
+            "float32": jnp.float32}[name]

@@ -1,0 +1,270 @@
+"""Whisper-style encoder-decoder LM (audio frontend stubbed).
+
+Per the brief, the conv/log-mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d_model). The transformer backbone —
+bidirectional encoder, causal decoder with cross-attention, LayerNorm, GELU,
+biases, absolute sinusoidal positions, tied embeddings — is real.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models.common import (ParamDef, dtype_of, init_params, make_norm,
+                                 norm_schema, schema_shapes, schema_specs,
+                                 sinusoidal_positions, stack_schema)
+from repro.sharding.rules import Sharder
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig, sharder: Optional[Sharder] = None,
+                 use_pallas: bool = False, attn_chunk: int = 512,
+                 remat: bool = True):
+        assert cfg.is_encdec
+        self.cfg = cfg
+        self.sharder = sharder or Sharder(mesh=None)
+        self.use_pallas = use_pallas
+        self.attn_chunk = attn_chunk
+        self.remat = remat
+        self.dtype = dtype_of(cfg.dtype)
+        self.norm = make_norm(cfg.norm)
+        self._schema = self._build_schema()
+
+    # -- schema ------------------------------------------------------------
+    def _attn_schema(self) -> Dict:
+        c = self.cfg
+        return {
+            "wq": ParamDef((c.d_model, c.n_heads * c.hd), ("embed", "heads")),
+            "wk": ParamDef((c.d_model, c.n_kv_heads * c.hd),
+                           ("embed", "kv_heads")),
+            "wv": ParamDef((c.d_model, c.n_kv_heads * c.hd),
+                           ("embed", "kv_heads")),
+            "wo": ParamDef((c.n_heads * c.hd, c.d_model), ("heads", "embed")),
+            "bq": ParamDef((c.n_heads * c.hd,), ("heads",), "zeros"),
+            "bk": ParamDef((c.n_kv_heads * c.hd,), ("kv_heads",), "zeros"),
+            "bv": ParamDef((c.n_kv_heads * c.hd,), ("kv_heads",), "zeros"),
+            "bo": ParamDef((c.d_model,), ("embed",), "zeros"),
+        }
+
+    def _enc_layer_schema(self) -> Dict:
+        c = self.cfg
+        return {
+            "ln1": norm_schema(c.norm, c.d_model),
+            "attn": self._attn_schema(),
+            "ln2": norm_schema(c.norm, c.d_model),
+            "mlp": ffn_mod.ffn_schema(c.d_model, c.d_ff, c.gated_ffn,
+                                      c.mlp_bias),
+        }
+
+    def _dec_layer_schema(self) -> Dict:
+        c = self.cfg
+        return {
+            "ln1": norm_schema(c.norm, c.d_model),
+            "self_attn": self._attn_schema(),
+            "ln2": norm_schema(c.norm, c.d_model),
+            "cross_attn": self._attn_schema(),
+            "ln3": norm_schema(c.norm, c.d_model),
+            "mlp": ffn_mod.ffn_schema(c.d_model, c.d_ff, c.gated_ffn,
+                                      c.mlp_bias),
+        }
+
+    def _build_schema(self) -> Dict:
+        c = self.cfg
+        return {
+            "embed": {"tok": ParamDef((c.padded_vocab, c.d_model),
+                                      ("vocab", "embed"))},
+            "encoder": stack_schema(self._enc_layer_schema(),
+                                    c.n_encoder_layers),
+            "enc_final_ln": norm_schema(c.norm, c.d_model),
+            "decoder": stack_schema(self._dec_layer_schema(), c.n_layers),
+            "final_norm": norm_schema(c.norm, c.d_model),
+        }
+
+    def init(self, key):
+        return init_params(self._schema, key, self.dtype)
+
+    def param_specs(self):
+        return schema_specs(self._schema)
+
+    def param_shapes(self):
+        return schema_shapes(self._schema, self.dtype)
+
+    def param_count(self) -> int:
+        from repro.models.common import param_count
+        return param_count(self._schema)
+
+    # -- attention helpers ---------------------------------------------------
+    def _proj_qkv(self, p, xq, xkv):
+        c = self.cfg
+        q = (xq @ p["wq"] + p["bq"]).reshape(
+            xq.shape[0], xq.shape[1], c.n_heads, c.hd)
+        k = (xkv @ p["wk"] + p["bk"]).reshape(
+            xkv.shape[0], xkv.shape[1], c.n_kv_heads, c.hd)
+        v = (xkv @ p["wv"] + p["bv"]).reshape(
+            xkv.shape[0], xkv.shape[1], c.n_kv_heads, c.hd)
+        return q, k, v
+
+    def _attn_out(self, p, o, b, s):
+        c = self.cfg
+        return o.reshape(b, s, c.n_heads * c.hd) @ p["wo"] + p["bo"]
+
+    # -- encoder --------------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames: (B, S_enc, d_model) stubbed frontend output."""
+        c = self.cfg
+        x = frames.astype(self.dtype)
+        x = x + sinusoidal_positions(x.shape[1], c.d_model).astype(self.dtype)
+        x = self.sharder.constrain(x, "batch", "seq", None)
+
+        def body(h, p_l):
+            a = self.norm(h, p_l["ln1"])
+            q, k, v = self._proj_qkv(p_l["attn"], a, a)
+            o = attn.prefill_attention(q, k, v, causal=False,
+                                       chunk_q=self.attn_chunk)
+            h = h + self._attn_out(p_l["attn"], o, h.shape[0], h.shape[1])
+            m = self.norm(h, p_l["ln2"])
+            h = h + ffn_mod.ffn_apply(p_l["mlp"], m, c.act, c.gated_ffn,
+                                      sharder=self.sharder)
+            return h, None
+        body = jax.checkpoint(body) if self.remat else body
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return self.norm(x, params["enc_final_ln"])
+
+    # -- decoder (full sequence) ----------------------------------------------
+    def _decoder_full(self, params, tokens, enc_out, collect_kv: bool):
+        c = self.cfg
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        x = x + sinusoidal_positions(x.shape[1], c.d_model).astype(self.dtype)
+
+        def body(h, p_l):
+            a = self.norm(h, p_l["ln1"])
+            q, k, v = self._proj_qkv(p_l["self_attn"], a, a)
+            o = attn.prefill_attention(q, k, v, causal=True,
+                                       chunk_q=self.attn_chunk)
+            h = h + self._attn_out(p_l["self_attn"], o, h.shape[0],
+                                   h.shape[1])
+            a = self.norm(h, p_l["ln2"])
+            qc, kc, vc = self._proj_qkv(p_l["cross_attn"], a, enc_out)
+            oc = attn.prefill_attention(qc, kc, vc, causal=False,
+                                        chunk_q=self.attn_chunk)
+            h = h + self._attn_out(p_l["cross_attn"], oc, h.shape[0],
+                                   h.shape[1])
+            m = self.norm(h, p_l["ln3"])
+            h = h + ffn_mod.ffn_apply(p_l["mlp"], m, c.act, c.gated_ffn,
+                                      sharder=self.sharder)
+            if collect_kv:
+                return h, (k, v, kc, vc)
+            return h, None
+        body = jax.checkpoint(body) if self.remat else body
+        x, ys = jax.lax.scan(body, x, params["decoder"])
+        return self.norm(x, params["final_norm"]), ys
+
+    def logits(self, params, x):
+        out = x @ params["embed"]["tok"].T
+        return self.sharder.constrain(out, "batch", "seq", "vocab")
+
+    # -- public API -------------------------------------------------------------
+    def loss(self, params, batch) -> jax.Array:
+        c = self.cfg
+        enc_out = self.encode(params, batch["embeds"])
+        x, _ = self._decoder_full(params, batch["tokens"], enc_out,
+                                  collect_kv=False)
+        logits = self.logits(params, x).astype(jnp.float32)
+        if c.padded_vocab != c.vocab:
+            pad = jnp.arange(c.padded_vocab) < c.vocab
+            logits = jnp.where(pad[None, None, :], logits, -1e30)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["targets"][..., None],
+                                   axis=-1)[..., 0]
+        mask = batch.get("mask")
+        if mask is not None:
+            return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.mean(nll)
+
+    def init_cache(self, batch: int, max_len: int, s_enc: int,
+                   ring: bool = True, vector_pos: bool = False) -> Dict:
+        c = self.cfg
+        return {
+            "pos": (jnp.zeros((batch,), jnp.int32) if vector_pos
+                    else jnp.zeros((), jnp.int32)),
+            "k": jnp.zeros((c.n_layers, batch, max_len, c.n_kv_heads, c.hd),
+                           self.dtype),
+            "v": jnp.zeros((c.n_layers, batch, max_len, c.n_kv_heads, c.hd),
+                           self.dtype),
+            "ck": jnp.zeros((c.n_layers, batch, s_enc, c.n_kv_heads, c.hd),
+                            self.dtype),
+            "cv": jnp.zeros((c.n_layers, batch, s_enc, c.n_kv_heads, c.hd),
+                            self.dtype),
+        }
+
+    def cache_specs(self) -> Dict:
+        kv = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        return {"pos": (), "k": kv, "v": kv, "ck": kv, "cv": kv}
+
+    def prefill(self, params, inputs, max_len: Optional[int] = None):
+        """inputs: {"embeds": (B,S_enc,H) frames, "tokens": (B,S_dec)}."""
+        tokens = inputs["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        enc_out = self.encode(params, inputs["embeds"])
+        x, ys = self._decoder_full(params, tokens, enc_out, collect_kv=True)
+        k, v, kc, vc = ys
+        cache = self.init_cache(b, max_len, enc_out.shape[1])
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(self.dtype), 0, axis=2)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(self.dtype), 0, axis=2)
+        cache["ck"], cache["cv"] = kc, vc
+        cache["pos"] = jnp.array(s, jnp.int32)
+        logits = self.logits(params, x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: (B,1) int32."""
+        c = self.cfg
+        pos = cache["pos"]
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        max_pos = cache["k"].shape[2]
+        pe = sinusoidal_positions(max_pos, c.d_model).astype(self.dtype)
+        if pos.ndim == 0:
+            x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
+        else:   # per-sequence positions (continuous batching)
+            x = x + jnp.take(pe, jnp.minimum(pos, max_pos - 1),
+                             axis=0)[:, None]
+
+        def body(h, xs):
+            p_l, ck, cv, cck, ccv = xs
+            a = self.norm(h, p_l["ln1"])
+            q, k, v = self._proj_qkv(p_l["self_attn"], a, a)
+            ck2, cv2, _ = attn.cache_write_token(ck, cv, k, v, pos, None)
+            o = attn.decode_attention(q, ck2, cv2, pos, None)
+            h = h + self._attn_out(p_l["self_attn"], o, h.shape[0], 1)
+            a = self.norm(h, p_l["ln2"])
+            qc = (a @ p_l["cross_attn"]["wq"]
+                  + p_l["cross_attn"]["bq"]).reshape(
+                      h.shape[0], 1, c.n_heads, c.hd)
+            oc = attn.sdpa(qc, cck, ccv, mask=None)
+            h = h + self._attn_out(p_l["cross_attn"], oc, h.shape[0], 1)
+            m = self.norm(h, p_l["ln3"])
+            h = h + ffn_mod.ffn_apply(p_l["mlp"], m, c.act, c.gated_ffn,
+                                      sharder=self.sharder)
+            return h, (ck2, cv2)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        x = self.norm(x, params["final_norm"])
+        logits = self.logits(params, x)
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = k_new, v_new
+        new_cache["pos"] = pos + 1
+        return logits, new_cache
+
+    def sample_greedy(self, logits):
+        return jnp.argmax(logits[..., :self.cfg.vocab], axis=-1)

@@ -1,0 +1,41 @@
+"""Dense feed-forward blocks (gated SwiGLU-style and plain MLP)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, activation
+
+
+def ffn_schema(d_model: int, d_ff: int, gated: bool, bias: bool) -> Dict:
+    s = {
+        "w_up": ParamDef((d_model, d_ff), ("embed", "ffn")),
+        "w_down": ParamDef((d_ff, d_model), ("ffn", "embed")),
+    }
+    if gated:
+        s["w_gate"] = ParamDef((d_model, d_ff), ("embed", "ffn"))
+    if bias:
+        s["b_up"] = ParamDef((d_ff,), ("ffn",), "zeros")
+        s["b_down"] = ParamDef((d_model,), ("embed",), "zeros")
+    return s
+
+
+def ffn_apply(p: Dict, x: jax.Array, act: str, gated: bool,
+              sharder=None) -> jax.Array:
+    h = x @ p["w_up"]
+    if "b_up" in p:
+        h = h + p["b_up"]
+    a = activation(act)
+    if gated:
+        h = a(x @ p["w_gate"]) * h
+    else:
+        h = a(h)
+    if sharder is not None:
+        h = sharder.constrain(h, "batch", "seq", "ffn")
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y

@@ -1,0 +1,99 @@
+"""Top-k mixture-of-experts FFN with sort-free capacity dispatch.
+
+Dispatch is scatter/gather based (not one-hot einsum) so compiled FLOPs
+reflect *active* expert compute — tokens*top_k*H*F — matching the MoE rows
+we added to the paper's Table 2 (see core/roofline.py). A dense-all-experts
+fallback would make every MoE roofline look compute-bound and useless.
+
+Layout: tokens are flattened to (T, H); each (token, k) pair gets a slot in
+its expert's capacity buffer (E, C, H); overflow tokens are dropped (their
+gate weight contributes nothing — standard Switch/Mixtral-style capacity
+semantics with capacity_factor headroom).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, activation
+
+
+def moe_schema(d_model: int, d_ff: int, n_experts: int, gated: bool) -> Dict:
+    s = {
+        "router": ParamDef((d_model, n_experts), ("embed", None)),
+        "w_up": ParamDef((n_experts, d_model, d_ff),
+                         ("experts", "embed", "expert_ffn")),
+        "w_down": ParamDef((n_experts, d_ff, d_model),
+                           ("experts", "expert_ffn", "embed")),
+    }
+    if gated:
+        s["w_gate"] = ParamDef((n_experts, d_model, d_ff),
+                               ("experts", "embed", "expert_ffn"))
+    return s
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int,
+              capacity_factor: float) -> int:
+    c = int(n_tokens * top_k / n_experts * capacity_factor)
+    return max(4, min(n_tokens, c))
+
+
+def moe_apply(p: Dict, x: jax.Array, top_k: int, act: str, gated: bool,
+              capacity_factor: float = 1.25, sharder=None
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, H) -> (B, S, H), aux_loss (load-balancing, Switch-style)."""
+    b, s, h = x.shape
+    e = p["router"].shape[-1]
+    t = b * s
+    xt = x.reshape(t, h)
+    logits = (xt @ p["router"]).astype(jnp.float32)          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)      # (T, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    cap = _capacity(t, e, top_k, capacity_factor)
+    # position of each (token,k) within its expert queue, in (T*k) flat order
+    flat_expert = expert_idx.reshape(-1)                     # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, e, dtype=jnp.int32)  # (T*k, E)
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)    # exclusive
+    pos = jnp.take_along_axis(pos_in_expert, flat_expert[:, None],
+                              axis=1)[:, 0]                  # (T*k,)
+    keep = pos < cap
+    slot = flat_expert * cap + jnp.where(keep, pos, 0)       # (T*k,)
+
+    token_idx = jnp.repeat(jnp.arange(t), top_k)             # (T*k,)
+    gathered = jnp.take(xt, token_idx, axis=0)               # (T*k, H)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    buf = jnp.zeros((e * cap, h), xt.dtype).at[slot].add(gathered)
+    buf = buf.reshape(e, cap, h)
+    if sharder is not None:
+        buf = sharder.constrain(buf, "experts", "moe_cap", "embed")
+
+    # expert compute: (E, C, H) x (E, H, F)
+    hmid = jnp.einsum("ech,ehf->ecf", buf, p["w_up"])
+    a = activation(act)
+    if gated:
+        hmid = a(jnp.einsum("ech,ehf->ecf", buf, p["w_gate"])) * hmid
+    else:
+        hmid = a(hmid)
+    if sharder is not None:
+        hmid = sharder.constrain(hmid, "experts", "moe_cap",
+                                 "expert_ffn")
+    out_buf = jnp.einsum("ecf,efh->ech", hmid, p["w_down"]).reshape(
+        e * cap, h)
+
+    # combine: gather each (token,k) slot's output, weight by gate, sum k
+    per_pair = jnp.take(out_buf, slot, axis=0)               # (T*k, H)
+    per_pair = per_pair * (gate_vals.reshape(-1)[:, None]
+                           * keep[:, None]).astype(per_pair.dtype)
+    out = jnp.sum(per_pair.reshape(t, top_k, h), axis=1)
+
+    # Switch-style load balancing aux loss
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, h), aux

@@ -1,0 +1,202 @@
+"""Mamba2 (SSD — state-space duality) block in pure JAX.
+
+Prefill/train use the chunked SSD algorithm (arXiv:2405.21060): the sequence
+is cut into chunks; within a chunk the dual quadratic form runs on the MXU
+(C B^T masked by cumulative decay), between chunks a tiny recurrence carries
+the (heads, head_dim, state) SSM state. Decode is the O(1) recurrent step.
+
+This module is also the oracle for ``repro.kernels.ssd_scan``.
+
+Layout (n_groups=1, as mamba2-1.3b / zamba2):
+  in_proj : H -> [z (d_inner), x (d_inner), B (N), C (N), dt (nheads)]
+  conv1d  : causal depthwise width-4 over [x, B, C]
+  SSD     : h_t = h_{t-1} * exp(dt_t A) + dt_t * B_t (x) x_t ; y_t = C_t . h_t
+  gate    : y = RMSNorm(y) * silu(z) ; out_proj : d_inner -> H
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, rms_norm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array    # (B, conv_width-1, d_inner + 2N)
+    ssd: jax.Array     # (B, nheads, head_dim, N) float32
+
+
+def mamba2_schema(d_model: int, d_inner: int, n_state: int, n_heads: int,
+                  conv_width: int) -> Dict:
+    conv_ch = d_inner + 2 * n_state
+    proj_out = 2 * d_inner + 2 * n_state + n_heads
+    return {
+        "w_in": ParamDef((d_model, proj_out), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((conv_width, conv_ch), (None, "ssm_inner"),
+                           "normal", 0.1),
+        "conv_b": ParamDef((conv_ch,), ("ssm_inner",), "zeros"),
+        "dt_bias": ParamDef((n_heads,), ("ssm_heads",), "mamba_dt"),
+        "a_log": ParamDef((n_heads,), ("ssm_heads",), "mamba_alog"),
+        "d_skip": ParamDef((n_heads,), ("ssm_heads",), "ones"),
+        "gate_norm": ParamDef((d_inner,), ("ssm_inner",), "ones"),
+        "w_out": ParamDef((d_inner, d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(proj: jax.Array, d_inner: int, n_state: int, n_heads: int):
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:2 * d_inner + 2 * n_state]
+    dt = proj[..., 2 * d_inner + 2 * n_state:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 init_state: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. xbc: (B,S,C), w: (K,C). init_state (B,K-1,C)
+    supplies left context (zeros for a fresh prompt)."""
+    k = w.shape[0]
+    if init_state is None:
+        init_state = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]),
+                               xbc.dtype)
+    xp = jnp.concatenate([init_state, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, chunk: int = 128,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  (B, S, nh, hd)   dt: (B, S, nh)  (already softplus'ed, >0)
+    a:  (nh,)  negative   b, c: (B, S, N)  (n_groups=1, shared over heads)
+    h0: (B, nh, hd, N) initial state (float32).
+    Returns y (B,S,nh,hd), h_final.
+    """
+    B, S, nh, hd = x.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 => decay exp(0)=1 and no state update, so
+        # padded steps are exact no-ops for the carried state.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    S_pad = S + pad
+    nc = S_pad // chunk
+    xc = x.reshape(B, nc, chunk, nh, hd)
+    dtc = dt.reshape(B, nc, chunk, nh)
+    bc = b.reshape(B, nc, chunk, N)
+    cc = c.reshape(B, nc, chunk, N)
+    if h0 is None:
+        h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+
+    def per_chunk(h, inp):
+        xk, dtk, bk, ck = inp          # (B,chunk,nh,hd) (B,chunk,nh) ...
+        # log-decay within chunk: l_t = sum_{u<=t} dt_u * a   (B,chunk,nh)
+        da = dtk * a                    # negative
+        l = jnp.cumsum(da, axis=1)
+        # intra-chunk dual form: m[i,j] = exp(l_i - l_j) for j<=i
+        li = l[:, :, None, :]           # (B,chunk_i,1,nh)
+        lj = l[:, None, :, :]           # (B,1,chunk_j,nh)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        decay = jnp.where(mask, jnp.exp(li - lj), 0.0)      # (B,i,j,nh)
+        cb = jnp.einsum("bin,bjn->bij", ck.astype(jnp.float32),
+                        bk.astype(jnp.float32))             # (B,i,j)
+        m = cb[..., None] * decay                           # (B,i,j,nh)
+        xdt = xk.astype(jnp.float32) * dtk[..., None]       # (B,j,nh,hd)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", m, xdt)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhdn,bih->bihd", ck.astype(jnp.float32),
+                             h, jnp.exp(li[:, :, 0, :]))
+        # state update: h' = h * exp(l_last) + sum_j exp(l_last - l_j) dt_j
+        #               B_j (x) x_j
+        l_last = l[:, -1:, :]                               # (B,1,nh)
+        w = jnp.exp(l_last - l)                             # (B,chunk,nh)
+        hb = jnp.einsum("bjn,bjhd,bjh->bhdn", bk.astype(jnp.float32),
+                        xdt, w)
+        h_new = h * jnp.exp(l_last[:, 0, :])[:, :, None, None] + hb
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    inputs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+              jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    h_final, ys = jax.lax.scan(per_chunk, h0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S_pad, nh, hd)
+    if pad:
+        y = y[:, :S]
+    return y, h_final
+
+
+def ssd_step(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One recurrent step. x: (B,nh,hd), dt: (B,nh), b/c: (B,N),
+    h: (B,nh,hd,N) fp32."""
+    da = jnp.exp(dt * a)                                    # (B,nh)
+    upd = jnp.einsum("bhd,bn->bhdn", x.astype(jnp.float32) * dt[..., None],
+                     b.astype(jnp.float32))
+    h_new = h * da[..., None, None] + upd
+    y = jnp.einsum("bhdn,bn->bhd", h_new, c.astype(jnp.float32))
+    return y.astype(x.dtype), h_new
+
+
+def mamba2_prefill(p: Dict, x: jax.Array, d_inner: int, n_state: int,
+                   n_heads: int, head_dim: int, chunk: int = 128,
+                   use_kernel: bool = False
+                   ) -> Tuple[jax.Array, SSMState]:
+    """Full-prompt Mamba2 block. x: (B,S,H) -> (y (B,S,H), final state)."""
+    B, S, H = x.shape
+    proj = x @ p["w_in"]
+    z, xbc, dt = _split_proj(proj, d_inner, n_state, n_heads)
+    conv_tail = xbc[:, -(p["conv_w"].shape[0] - 1):, :]      # pre-activation
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner].reshape(B, S, n_heads, head_dim)
+    bmat = xbc[..., d_inner:d_inner + n_state]
+    cmat = xbc[..., d_inner + n_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y, h = kops.ssd_scan(xs, dt, a, bmat, cmat, chunk=chunk)
+    else:
+        y, h = ssd_chunked(xs, dt, a, bmat, cmat, chunk=chunk)
+    y = y + xs * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y, p["gate_norm"]) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    # conv state for subsequent decode: last K-1 *pre-conv* channel values
+    pad = p["conv_w"].shape[0] - 1 - conv_tail.shape[1]
+    if pad > 0:
+        conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+    return out, SSMState(conv_tail, h)
+
+
+def mamba2_step(p: Dict, x: jax.Array, state: SSMState, d_inner: int,
+                n_state: int, n_heads: int, head_dim: int
+                ) -> Tuple[jax.Array, SSMState]:
+    """One-token Mamba2 step. x: (B,1,H)."""
+    B = x.shape[0]
+    proj = x @ p["w_in"]                                    # (B,1,P)
+    z, xbc, dt = _split_proj(proj, d_inner, n_state, n_heads)
+    # conv over [state ; current]
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([state.conv, xbc], axis=1)     # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]            # (B,1,C)
+    new_conv = window[:, 1:, :]
+    xs = conv_out[..., :d_inner].reshape(B, n_heads, head_dim)
+    bmat = conv_out[:, 0, d_inner:d_inner + n_state]
+    cmat = conv_out[:, 0, d_inner + n_state:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h_new = ssd_step(xs, dt1, a, bmat, cmat, state.ssd)
+    y = y + xs * p["d_skip"][None, :, None]
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y, p["gate_norm"]) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, SSMState(new_conv, h_new)

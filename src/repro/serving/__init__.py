@@ -1,0 +1,7 @@
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest
+from repro.serving.server import FTTimes, GlobalServer, ServingPipeline
+from repro.serving.tensor_store import TensorStore
+
+__all__ = ["Engine", "ServeRequest", "FTTimes", "GlobalServer",
+           "ServingPipeline", "TensorStore"]

@@ -1,0 +1,151 @@
+"""Real JAX inference engine with continuous batching.
+
+Slot-based continuous batching: a fixed (max_batch, max_len) KV/state cache;
+each slot holds one request at its own position (the decode path supports
+per-sequence position vectors). Admission prefills a request and scatters
+its cache rows into a free slot; every ``step()`` decodes one token for all
+live slots; finished slots free immediately.
+
+This is the execution-plane engine — it actually generates tokens (small
+models on CPU in tests/examples; the same code path jit-lowers for the
+production meshes via launch.steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.serving.request import ServeRequest
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params: Any, max_batch: int = 8,
+                 max_len: int = 256, model_kw: Optional[Dict] = None,
+                 np_rng: Optional[np.random.RandomState] = None):
+        self.cfg = cfg
+        self.model = build_model(cfg, **(model_kw or {}))
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.enc_frames = 8           # stubbed frontend frame count
+        if cfg.is_encdec:
+            self.cache = self.model.init_cache(max_batch, max_len,
+                                               s_enc=self.enc_frames,
+                                               vector_pos=True)
+        else:
+            self.cache = self.model.init_cache(max_batch, max_len,
+                                               ring=False, vector_pos=True)
+        self.slots: List[Optional[ServeRequest]] = [None] * max_batch
+        self.stats = EngineStats()
+        self._decode = jax.jit(self.model.decode_step)
+
+    # -- slot management ------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s is None]
+
+    def active(self) -> List[ServeRequest]:
+        return [s for s in self.slots if s is not None]
+
+    def _scatter_cache(self, slot: int, one: Dict) -> None:
+        """Write a single-request cache (batch dim 1) into slot ``slot``."""
+        def scatter(big, small, batch_axis):
+            idx = [slice(None)] * big.ndim
+            idx[batch_axis] = slice(slot, slot + 1)
+            pad = [(0, b - s) for b, s in
+                   zip(big[tuple(idx)].shape, small.shape)]
+            if any(p != (0, 0) for p in pad):
+                small = jnp.pad(small, pad)
+            return big.at[tuple(idx)].set(small.astype(big.dtype))
+
+        for key, small in one.items():
+            if key == "pos":
+                self.cache["pos"] = self.cache["pos"].at[slot].set(small)
+            elif key == "slot_pos":
+                continue                      # engine caches are linear
+            else:
+                axis = 1                      # (L, B, ...) stacked caches
+                self.cache[key] = scatter(self.cache[key], small, axis)
+
+    # -- admission --------------------------------------------------------------
+    def admit(self, req: ServeRequest) -> bool:
+        """Prefill ``req``'s full context (prompt + generated — that is what
+        makes migration output-preserving) into a free slot."""
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        ctx = req.full_context()
+        assert len(ctx) + req.max_new_tokens - len(req.generated) \
+            <= self.max_len, "context exceeds engine max_len"
+        tokens = jnp.asarray([ctx], jnp.int32)
+        if self.cfg.is_encdec:
+            # frontend is a stub: deterministic zero frames (the decoder
+            # token stream is what migration must preserve)
+            frames = jnp.zeros((1, self.enc_frames, self.cfg.d_model),
+                               jnp.float32)
+            logits, one = self.model.prefill(
+                self.params, {"embeds": frames, "tokens": tokens},
+                max_len=self.max_len)
+        else:
+            logits, one = self.model.prefill(self.params, {"tokens": tokens},
+                                             max_len=self.max_len,
+                                             ring=False)
+        self._scatter_cache(slot, one)
+        self.slots[slot] = req
+        self.stats.prefills += 1
+        if not req.generated:        # fresh request: prefill emits 1st token
+            tok = int(self.model.sample_greedy(logits)[0])
+            req.generated.append(tok)
+            self.stats.tokens_out += 1
+        return True
+
+    # -- decode -----------------------------------------------------------------
+    def step(self) -> List[ServeRequest]:
+        """One decode iteration for all live slots; returns finished."""
+        live = [i for i, s in enumerate(self.slots) if s is not None]
+        if not live:
+            return []
+        tokens = jnp.asarray(
+            [[self.slots[i].generated[-1] if (self.slots[i] is not None
+                                              and self.slots[i].generated)
+              else 0] for i in range(self.max_batch)], jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache, tokens)
+        nxt = np.asarray(self.model.sample_greedy(logits))[:, 0]
+        finished = []
+        for i in live:
+            req = self.slots[i]
+            req.generated.append(int(nxt[i]))
+            self.stats.tokens_out += 1
+            if req.done:
+                finished.append(req)
+                self.slots[i] = None
+        self.stats.decode_steps += 1
+        return finished
+
+    def drain(self) -> List[ServeRequest]:
+        """Run until every admitted request finishes."""
+        out = []
+        while self.active():
+            out.extend(self.step())
+        return out
+
+    def evict_all(self) -> List[ServeRequest]:
+        """Simulated engine death: return in-flight requests (their
+        ``generated`` lists are the preserved output — paper §5.1)."""
+        reqs = [s for s in self.slots if s is not None]
+        self.slots = [None] * self.max_batch
+        return reqs

@@ -1,0 +1,179 @@
+"""Global server: pipelines + instance manager + fault tolerance (paper §3,
+§5) over the REAL engine (execution plane).
+
+A ``ServingPipeline`` binds an ``Engine`` to a set of instance ids (from a
+placement). The ``GlobalServer``:
+
+  * dispatches requests weighted-round-robin by pipeline throughput (§3);
+  * on a spot interruption: collects in-flight requests WITH their generated
+    outputs (output-preserving request migration, §5.1) and re-queues them;
+  * rebuilds the pipeline with a replacement instance: with the shared
+    tensor store the new engine ATTACHES to resident weights (concurrent
+    initialization, §5.2) — the rebuild overlaps serving on the other
+    pipelines and costs zero weight-reload; without the store it must
+    re-load weights (slow path, modeled on the virtual clock).
+
+Wall time is virtual (``clock``): control-plane latencies (provision/load/
+init/grace) advance the clock; token generation is real JAX compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.serving.engine import Engine
+from repro.serving.request import ServeRequest
+from repro.serving.tensor_store import TensorStore
+
+
+@dataclasses.dataclass
+class FTTimes:
+    grace_period_s: float = 120.0
+    node_provision_s: float = 41.55
+    store_load_s: float = 61.85
+    engine_init_s: float = 64.51
+
+
+@dataclasses.dataclass
+class ServingPipeline:
+    pid: int
+    engine: Engine
+    instance_ids: List[str]
+    weight: float = 1.0
+    alive: bool = True
+    down_until: float = 0.0
+    queue: List[ServeRequest] = dataclasses.field(default_factory=list)
+
+
+class GlobalServer:
+    def __init__(self, cfg: ArchConfig, store: Optional[TensorStore],
+                 ft: Optional[FTTimes] = None, use_migration: bool = True,
+                 use_concurrent_init: bool = True, max_batch: int = 4,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.store = store
+        self.ft = ft or FTTimes()
+        self.use_migration = use_migration
+        self.use_concurrent_init = use_concurrent_init
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.pipelines: List[ServingPipeline] = []
+        self.clock = 0.0
+        self._rr_credit: Dict[int, float] = {}
+        self.completed: List[ServeRequest] = []
+        self.events: List[Tuple[float, str, str]] = []   # (t, kind, detail)
+
+    # -- pipeline lifecycle ---------------------------------------------------
+    def add_pipeline(self, params: Any, instance_ids: Sequence[str],
+                     weight: float = 1.0, partition: str = "full"
+                     ) -> ServingPipeline:
+        if self.store is not None:
+            self.store.put(self.cfg.name, f"{partition}/p{len(self.pipelines)}",
+                           params)
+            params = self.store.attach(
+                self.cfg.name, f"{partition}/p{len(self.pipelines)}")
+        eng = Engine(self.cfg, params, max_batch=self.max_batch,
+                     max_len=self.max_len)
+        p = ServingPipeline(len(self.pipelines), eng, list(instance_ids),
+                            weight)
+        self.pipelines.append(p)
+        self._rr_credit[p.pid] = 0.0
+        return p
+
+    # -- dispatch ---------------------------------------------------------------
+    def submit(self, req: ServeRequest) -> Optional[ServingPipeline]:
+        alive = [p for p in self.pipelines if p.alive]
+        if not alive:
+            return None
+        for p in alive:
+            self._rr_credit[p.pid] += p.weight
+        best = max(alive, key=lambda p: self._rr_credit[p.pid])
+        self._rr_credit[best.pid] -= sum(p.weight for p in alive)
+        best.queue.append(req)
+        return best
+
+    # -- serving loop -------------------------------------------------------------
+    def step(self) -> int:
+        """One scheduling round: admit queued requests, one decode step per
+        alive pipeline. Returns tokens emitted."""
+        emitted = 0
+        for p in self.pipelines:
+            if not p.alive:
+                if self.clock >= p.down_until:
+                    p.alive = True
+                    self.events.append((self.clock, "revive", f"p{p.pid}"))
+                else:
+                    continue
+            while p.queue and p.engine.free_slots():
+                req = p.queue.pop(0)
+                p.engine.admit(req)
+                if req.first_token_s < 0 and req.generated:
+                    req.first_token_s = self.clock
+            fin = p.engine.step()
+            emitted += len([s for s in p.engine.slots if s]) + len(fin)
+            for r in fin:
+                r.finish_s = self.clock
+                self.completed.append(r)
+        return emitted
+
+    def run_until_drained(self, max_rounds: int = 10_000) -> None:
+        rounds = 0
+        while rounds < max_rounds:
+            pending = any(p.queue or p.engine.active()
+                          for p in self.pipelines)
+            if not pending:
+                break
+            self.step()
+            self.clock += 0.01
+            rounds += 1
+
+    # -- fault tolerance ------------------------------------------------------------
+    def interrupt_instance(self, instance_id: str) -> List[ServeRequest]:
+        """Spot interruption notice for one instance: the owning pipeline is
+        torn down after the grace period; in-flight requests migrate
+        (output-preserving) or restart. Returns the affected requests."""
+        ft = self.ft
+        affected: List[ServeRequest] = []
+        for p in self.pipelines:
+            if not p.alive or instance_id not in p.instance_ids:
+                continue
+            self.events.append((self.clock, "interrupt",
+                                f"p{p.pid}:{instance_id}"))
+            # old pipeline serves through the grace period
+            grace_end = self.clock + ft.grace_period_s
+            if self.use_concurrent_init and self.store is not None:
+                # replacement prepared in background; store makes the engine
+                # init on unaffected nodes free of weight reloads
+                ready = (self.clock + ft.node_provision_s
+                         + max(ft.store_load_s, ft.engine_init_s))
+                p.down_until = max(grace_end, ready)
+            else:
+                # must terminate old engine first; fresh engine reloads
+                ready = (max(grace_end, self.clock + ft.node_provision_s)
+                         + ft.store_load_s + ft.engine_init_s)
+                p.down_until = ready
+            reqs = p.engine.evict_all() + p.queue
+            p.queue = []
+            for r in reqs:
+                if not self.use_migration:
+                    r.generated = []          # progress lost
+                r.migrations += 1
+                affected.append(r)
+            p.alive = False
+            p.instance_ids = [i for i in p.instance_ids if i != instance_id]
+            p.instance_ids.append(f"{instance_id}/replacement")
+            # rebuild engine NOW (attach-only when store present) so tokens
+            # keep flowing the moment down_until passes
+            params = p.engine.params
+            p.engine = Engine(self.cfg, params, max_batch=self.max_batch,
+                              max_len=self.max_len)
+        # re-dispatch affected requests to surviving pipelines
+        for r in affected:
+            self.submit(r)
+        return affected
+
+    def downtime_of(self, pid: int) -> float:
+        p = self.pipelines[pid]
+        return max(0.0, p.down_until - self.clock)

@@ -1,0 +1,148 @@
+"""Divisibility-aware logical-axis sharding (GSPMD).
+
+Model code annotates tensors with *logical* axis names; a rule table maps
+logical names to mesh axes per execution mode. ``resolve`` drops a mesh axis
+whenever the dimension is not divisible by the mesh-axis size — heterogenous
+head counts (14 q-heads on a 16-way model axis, 8 kv-heads, 40 experts, odd
+vocabs) then fall back to replication instead of failing to lower, and vocab
+dims are padded by the models to stay shardable (Megatron-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+# Rule tables. Keys are logical axis names used throughout repro.models.
+INFER_RULES: Dict[str, Axes] = {
+    "batch": ("data",),
+    "seq": None,
+    "cache_seq": None,         # launch code may set ("model",) when KV heads
+    #                            do not divide the model axis (seq-parallel KV)
+    "embed": None,             # replicated over data in inference
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "qkv_flat": ("model",),    # fused q/kv projection output dim
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": None,
+    "moe_cap": None,           # expert capacity dim (hillclimb lever)
+    "expert_ffn": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    "stack": None,
+}
+
+# Training: FSDP — shard the replicated-embed dims over data too.
+TRAIN_RULES: Dict[str, Axes] = dict(
+    INFER_RULES,
+    embed=("data",),
+    experts=None,
+)
+
+# Multi-pod training: gradients all-reduce over ("pod","data"); batch spans
+# both. (Serving multi-pod uses the pod axis for PP instead — launch/pipeline.)
+TRAIN_RULES_MULTIPOD: Dict[str, Axes] = dict(
+    TRAIN_RULES,
+    batch=("pod", "data"),
+)
+
+INFER_RULES_MULTIPOD: Dict[str, Axes] = dict(
+    INFER_RULES,
+    batch=("pod", "data"),
+)
+
+
+def _axis_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve(names: Sequence[Optional[str]], shape: Sequence[int],
+            rules: Dict[str, Axes], mesh: Mesh) -> P:
+    """Logical names -> PartitionSpec, dropping non-divisible axes."""
+    assert len(names) == len(shape), (names, shape)
+    out = []
+    used: set = set()
+    for name, dim in zip(names, shape):
+        axes = rules.get(name) if name else None
+        if axes is None:
+            out.append(None)
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        kept = []
+        denom = 1
+        for a in axes:
+            if a in used:
+                continue
+            sz = mesh.shape[a]
+            if dim % (denom * sz) == 0:
+                kept.append(a)
+                denom *= sz
+        for a in kept:
+            used.add(a)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+@dataclasses.dataclass
+class Sharder:
+    """Annotation helper threaded through model code.
+
+    ``mesh=None`` (unit tests, single CPU) makes every call the identity.
+    """
+
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, Axes] = dataclasses.field(
+        default_factory=lambda: dict(INFER_RULES))
+
+    def spec(self, names: Sequence[Optional[str]], shape: Sequence[int]) -> P:
+        if self.mesh is None:
+            return P()
+        return resolve(names, shape, self.rules, self.mesh)
+
+    def constrain(self, x: jax.Array, *names: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = self.spec(names, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def named_sharding(self, names: Sequence[Optional[str]],
+                       shape: Sequence[int]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(names, shape))
+
+
+def tree_shardings(specs_tree, shapes_tree, mesh: Mesh,
+                   rules: Dict[str, Axes]):
+    """Map a pytree of logical-name tuples + ShapeDtypeStructs to
+    NamedShardings (for jit in_shardings)."""
+    return jax.tree.map(
+        lambda names, sds: NamedSharding(
+            mesh, resolve(names, sds.shape, rules, mesh)),
+        specs_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))

@@ -1,0 +1,64 @@
+"""Elastic training: react to cluster membership changes.
+
+When spot capacity changes mid-run the trainer (1) checkpoints, (2) rebuilds
+the mesh for the surviving device count, (3) restores with the new mesh's
+shardings, (4) rescales the data-parallel batch (keeping per-device batch
+constant — linear-scaling rule with LR adjustment hook).
+
+On this CPU container meshes are host-device meshes; on real TPU the same
+code re-initializes the runtime across the surviving hosts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.sharding import rules as R
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class ElasticState:
+    mesh: Any
+    n_devices: int
+    global_batch: int
+
+
+def plan_resize(old: ElasticState, new_n_devices: int,
+                model_axis: int) -> Tuple[Tuple[int, int], int]:
+    """New (data, model) mesh shape + global batch. The model axis is fixed
+    by the sharding degree (weights layout); data axis absorbs the change."""
+    model = min(model_axis, new_n_devices)
+    while new_n_devices % model:
+        model //= 2
+    data = new_n_devices // model
+    per_dev = max(1, old.global_batch // max(1, old.n_devices))
+    return (data, model), per_dev * new_n_devices
+
+
+def resize_mesh(old: ElasticState, new_n_devices: int, model_axis: int,
+                devices=None) -> ElasticState:
+    import numpy as np
+    shape, new_batch = plan_resize(old, new_n_devices, model_axis)
+    devices = (devices or jax.devices())[:shape[0] * shape[1]]
+    mesh = jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), ("data", "model"))
+    return ElasticState(mesh, new_n_devices, new_batch)
+
+
+def reshard_state(state: Any, specs: Any, new: ElasticState,
+                  rules: Optional[Dict] = None) -> Any:
+    """Re-shard a (restored or live) train state onto the new mesh."""
+    rules = rules or dict(R.TRAIN_RULES)
+
+    def put(leaf, names):
+        sh = jax.sharding.NamedSharding(
+            new.mesh, R.resolve(names, leaf.shape, rules, new.mesh))
+        return jax.device_put(leaf, sh)
+
+    return jax.tree.map(
+        put, state, specs,
+        is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, tuple))

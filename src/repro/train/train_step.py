@@ -1,0 +1,107 @@
+"""Training step: microbatched gradient accumulation + AdamW.
+
+Gradient accumulation is mandatory at the assigned train_4k shape: a single
+forward over (256 x 4096) tokens would materialize (tokens x vocab) logits —
+petabytes for the 256k-vocab archs. The batch is split into microbatches and
+scanned; grads accumulate in fp32; each microbatch's layers are rematerialized
+(``remat=True`` in the model).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   init_adamw)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params, init_adamw(params))
+
+
+def train_state_specs(param_specs) -> TrainState:
+    """Logical-name tree matching TrainState (for in_shardings)."""
+    return TrainState(
+        params=param_specs,
+        opt=AdamWState(step=(), m=param_specs, v=param_specs))
+
+
+def choose_microbatches(global_batch: int, seq_len: int, vocab: int,
+                        n_chips: int, logit_budget_bytes: float = 2.68e8
+                        ) -> int:
+    """Pick grad-accum steps so per-chip microbatch logits stay under budget.
+
+    logits bytes/chip ~= mb*seq*vocab*4 / n_chips (batch+vocab sharded).
+    """
+    n_micro = 1
+    while n_micro < global_batch:
+        mb = global_batch // n_micro
+        if mb * seq_len * vocab * 4.0 / n_chips <= logit_budget_bytes:
+            break
+        n_micro *= 2
+    return min(n_micro, global_batch)
+
+
+def make_train_step(model, opt_cfg: Optional[AdamWConfig] = None,
+                    n_microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``batch`` leaves have leading dim == global_batch (except "positions"
+    with its (3, B, S) layout); they are reshaped to
+    (n_micro, mb, ...) and scanned.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    loss_fn = model.loss
+
+    def split_micro(x):
+        if x.ndim >= 3 and x.shape[0] == 3:     # (3, B, S) m-rope positions
+            b = x.shape[1]
+            mb = b // n_microbatches
+            x = x.reshape((3, n_microbatches, mb) + x.shape[2:])
+            return jnp.moveaxis(x, 1, 0)
+        b = x.shape[0]
+        mb = b // n_microbatches
+        return x.reshape((n_microbatches, mb) + x.shape[1:])
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        micro = jax.tree.map(split_micro, batch)
+        zero_grads = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+        def accum(carry, mb):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+            if opt_cfg.compress_grads_bf16:
+                # compression hook: accumulate via bf16 round-trip, which is
+                # what the DP all-reduce would carry on the wire.
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.bfloat16).astype(jnp.float32),
+                    grads)
+            else:
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gsum = jax.tree.map(jnp.add, gsum, grads)
+            return (gsum, lsum + loss), None
+
+        if n_microbatches == 1:
+            one = jax.tree.map(lambda x: x[0], micro)
+            (gsum, lsum), _ = accum((zero_grads, 0.0), one)
+        else:
+            (gsum, lsum), _ = jax.lax.scan(
+                accum, (zero_grads, 0.0), micro)
+        grads = jax.tree.map(lambda g: g / n_microbatches, gsum)
+        params, opt = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": lsum / n_microbatches,
+                   "grad_norm": jnp.sqrt(sum(
+                       jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))}
+        return TrainState(params, opt), metrics
+
+    return train_step

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process). Smoke tests run real compute on the single CPU device.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

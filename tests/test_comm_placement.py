@@ -1,0 +1,120 @@
+"""Comm model (Eqs. 2-3) + placement optimizer (Algorithm 1) tests."""
+
+import math
+
+import pytest
+
+from repro.core import comm
+from repro.core.modelspec import uniform_decoder
+from repro.core.objective import Objective
+from repro.core.placement import (PlacementOptimizer, exhaustive_search,
+                                  stage_options_for)
+from repro.core.cluster_opt import populate_cluster
+from repro.hw.profiles import AWS_INSTANCES
+
+
+def test_ring_allreduce_closed_form():
+    link = comm.Link(1e-5, 1e9)
+    n, p = 1 << 20, 4
+    t = comm.ring_allreduce(n, p, link)
+    expect = 2 * (1e-5 + (n / p) / 1e9) * (p - 1)
+    assert t == pytest.approx(expect)
+
+
+def test_eq3_tp_comm():
+    # Eq 3: 4*(alpha + BSHE/(D*beta))*(D-1)*l
+    link = comm.Link(5e-6, 32e9)
+    b, s, h, d, l, e = 2, 128, 512, 4, 8, 2
+    t = comm.tp_comm_latency(b, s, h, d, l, link, e)
+    n = b * s * h * e
+    expect = 4 * (5e-6 + (n / d) / 32e9) * (d - 1) * l
+    assert t == pytest.approx(expect)
+
+
+def test_tp1_no_comm():
+    link = comm.Link(5e-6, 32e9)
+    assert comm.tp_comm_latency(2, 128, 512, 1, 8, link) == 0.0
+
+
+def small_problem(n_layers=6):
+    spec = uniform_decoder("tiny", n_layers, 256, 4, 2, 512, 1000)
+    inv = {"g6e.xlarge": 2, "g6.12xlarge": 1}
+    return spec, inv, dict(AWS_INSTANCES)
+
+
+def test_dp_beam_matches_exhaustive_on_tiny():
+    spec, inv, insts = small_problem(4)
+    obj = Objective()
+    ex = exhaustive_search(spec, inv, insts, 128, 32, obj, max_stages=3)
+    dp = PlacementOptimizer(spec, inv, insts, 128, 32, objective=obj,
+                            beam_k=8, max_stages=3).search()
+    assert dp.placement is not None and ex.placement is not None
+    # beam search should find a placement within 2% of exhaustive optimum
+    assert dp.score >= ex.score * 0.98, (dp.score, ex.score)
+
+
+def test_placement_covers_all_layers_and_inventory():
+    spec, inv, insts = small_problem(6)
+    res = PlacementOptimizer(spec, inv, insts, 128, 32, beam_k=3).search()
+    p = res.placement
+    assert p is not None
+    assert sum(s.n_layers for s in p.stages) == spec.n_layers
+    used = {}
+    for s in p.stages:
+        used[s.instance.name] = used.get(s.instance.name, 0) + s.tp
+    for name, devs in used.items():
+        assert devs <= inv[name] * insts[name].num_devices
+
+
+def test_beam_width_monotone_score():
+    spec, inv, insts = small_problem(6)
+    scores = [PlacementOptimizer(spec, inv, insts, 128, 32,
+                                 beam_k=k).search().score
+              for k in (1, 4)]
+    assert scores[1] >= scores[0] - 1e-12
+
+
+def test_objective_slo_penalty():
+    from repro.core.estimator import PerfEstimate, Placement, Stage
+    spec, inv, insts = small_problem(4)
+    stages = (Stage(insts["g6e.xlarge"], 1, 4, first=True, last=True),)
+    placement = Placement(spec, stages)
+    perf = PerfEstimate(4, [0.1], [1.0], 0.1, 0.01, 2.0, 2.0)
+    base = Objective(gamma=0.0).score(placement, perf)
+    soft = Objective(gamma=0.5, slo_s=1.0).score(placement, perf)
+    hard = Objective(gamma=math.inf, slo_s=1.0).score(placement, perf)
+    assert base > soft > hard == 0.0
+
+
+def test_populate_cluster_fault_isolation():
+    """No instance may serve two pipelines (paper §4.2.1)."""
+    spec, _, insts = small_problem(6)
+    inv = {"g6e.xlarge": 3, "g6.12xlarge": 2}
+    plan = populate_cluster(spec, inv, insts, 128, 32, beam_k=2,
+                            max_pipelines=8)
+    assert len(plan.pipelines) >= 1
+    # count whole instances consumed per type <= inventory
+    total = {}
+    for p in plan.pipelines:
+        used = {}
+        for s in p.stages:
+            used[s.instance.name] = used.get(s.instance.name, 0) + s.tp
+        for n, d in used.items():
+            total[n] = total.get(n, 0) + math.ceil(
+                d / insts[n].num_devices)
+    for n, c in total.items():
+        assert c <= inv[n], (n, c, inv[n])
+
+
+def test_weights_sum_to_one():
+    spec, _, insts = small_problem(6)
+    inv = {"g6e.xlarge": 3, "g6.12xlarge": 2}
+    plan = populate_cluster(spec, inv, insts, 128, 32, beam_k=2)
+    if plan.pipelines:
+        assert sum(plan.weights()) == pytest.approx(1.0)
+
+
+def test_stage_options_power_of_two_tp():
+    opts = stage_options_for([AWS_INSTANCES["g6.12xlarge"]])
+    tps = sorted(o.tp for o in opts)
+    assert tps == [1, 2, 4]

@@ -1,0 +1,63 @@
+"""PP-over-pods building blocks (no big-mesh compile needed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.pipeline import (pack_pp_params, pp_layer_split,
+                                   pp_supported)
+from repro.models import build_model
+
+
+def test_pp_supported_families():
+    assert pp_supported(get_config("qwen3-32b"))
+    assert pp_supported(get_config("granite-moe-3b-a800m"))
+    assert not pp_supported(get_config("mamba2-1.3b"))       # ssm
+    assert not pp_supported(get_config("h2o-danube-3-4b"))   # swa
+    assert not pp_supported(get_config("whisper-tiny"))      # enc-dec
+
+
+def test_layer_split_covers_all_layers():
+    cfg = get_config("llama-3.1-70b")
+    for n_stages in (2, 4):
+        split = pp_layer_split(cfg, n_stages)
+        assert len(split) == n_stages
+        assert sum(split) == cfg.n_layers
+        assert all(x >= 1 for x in split)
+
+
+def test_homogeneous_split_near_even():
+    cfg = get_config("qwen3-32b")
+    split = pp_layer_split(cfg, 2)
+    assert abs(split[0] - split[1]) <= 2
+
+
+def test_heterogeneous_split_asymmetric():
+    """The paper's §2.3 mechanism: a slower pod gets fewer layers."""
+    cfg = get_config("qwen3-32b")
+    split = pp_layer_split(cfg, 2, pod_flops=[1.0, 0.5])
+    assert split[0] > split[1], split
+    # roughly proportional to capability (memory-bound decode => ~bandwidth
+    # ratio; both flops and bw scaled by 0.5 here)
+    assert 1.5 < split[0] / split[1] < 3.0
+
+
+def test_pack_pp_params_roundtrip():
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    split = [3, 1]
+    packed = pack_pp_params(params, split)
+    assert "pp_mask" in packed
+    mask = np.asarray(packed["pp_mask"])
+    assert mask.shape == (2, 3)
+    assert mask.sum() == 4                       # 3 + 1 active layers
+    # stage 0 rows 0..2 equal original layers 0..2; stage 1 row 0 == layer 3
+    for leaf_name in ("ln_attn",):
+        orig = np.asarray(params["layers"][leaf_name]["w"])
+        new = np.asarray(packed["layers"][leaf_name]["w"])
+        np.testing.assert_array_equal(new[0, :3], orig[:3])
+        np.testing.assert_array_equal(new[1, 0], orig[3])
+        assert np.all(new[1, 1:] == 0)           # padding

@@ -1,0 +1,145 @@
+"""Hypothesis property tests on system invariants."""
+
+import math
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import comm, roofline
+from repro.core.estimator import Placement, Stage, estimate, max_batch_size
+from repro.core.modelspec import LayerSpec, uniform_decoder
+from repro.core.placement import PlacementOptimizer
+from repro.hw.profiles import AWS_INSTANCES
+
+
+@settings(max_examples=40, deadline=None)
+@given(s_in=st.integers(1, 4096), s_out=st.integers(1, 1024),
+       window=st.one_of(st.none(), st.integers(1, 8192)))
+def test_decode_ctx_sum_matches_loop(s_in, s_out, window):
+    expect = sum(min(s_in + t, window) if window else s_in + t
+                 for t in range(1, s_out + 1))
+    assert roofline._decode_ctx_sum(s_in, s_out, window) == pytest.approx(
+        expect)
+
+
+@settings(max_examples=30, deadline=None)
+@given(h=st.sampled_from([256, 512, 1024]), nh=st.sampled_from([4, 8]),
+       nkv=st.sampled_from([1, 2, 4]), batch=st.integers(1, 64),
+       s_in=st.integers(16, 2048), d_tp=st.sampled_from([1, 2, 4, 8]))
+def test_flops_scale_linearly_in_batch_and_inverse_tp(h, nh, nkv, batch,
+                                                      s_in, d_tp):
+    l = LayerSpec("attn+ffn", h, nh, nkv, h // nh, 4 * h)
+    f1 = roofline.layer_flops(l, "prefill", batch, s_in, 0, 1)
+    fb = roofline.layer_flops(l, "prefill", 2 * batch, s_in, 0, 1)
+    ftp = roofline.layer_flops(l, "prefill", batch, s_in, 0, d_tp)
+    assert fb == pytest.approx(2 * f1, rel=1e-6)
+    assert ftp == pytest.approx(f1 / d_tp, rel=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 1 << 24), p=st.integers(2, 64))
+def test_allreduce_equals_rs_plus_ag(n, p):
+    link = comm.Link(1e-5, 1e9)
+    ar = comm.ring_allreduce(n, p, link)
+    assert ar == pytest.approx(2 * comm.ring_allgather(n, p, link))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_layers=st.integers(2, 12),
+       inv_e=st.integers(0, 3), inv_g=st.integers(0, 2),
+       s_in=st.sampled_from([128, 763]), seed=st.integers(0, 5))
+def test_placement_always_valid(n_layers, inv_e, inv_g, s_in, seed):
+    """For any inventory, a returned placement covers all layers exactly and
+    never exceeds device inventory."""
+    if inv_e + inv_g == 0:
+        return
+    spec = uniform_decoder("t", n_layers, 256, 4, 2, 512, 1000 + seed)
+    inv = {}
+    if inv_e:
+        inv["g6e.xlarge"] = inv_e
+    if inv_g:
+        inv["g6.12xlarge"] = inv_g
+    res = PlacementOptimizer(spec, inv, dict(AWS_INSTANCES), s_in, 32,
+                             beam_k=1, max_stages=4).search()
+    if res.placement is None:
+        return
+    p = res.placement
+    assert sum(s.n_layers for s in p.stages) == n_layers
+    used = {}
+    for s in p.stages:
+        used[s.instance.name] = used.get(s.instance.name, 0) + s.tp
+    for name, d in used.items():
+        assert d <= inv[name] * AWS_INSTANCES[name].num_devices
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_layers=st.integers(2, 8), s_in=st.integers(64, 2048),
+       s_out=st.integers(8, 512))
+def test_eq6_batch_fits_memory(n_layers, s_in, s_out):
+    """The Eq. 6 batch actually satisfies every stage's memory budget."""
+    from repro.core.estimator import (stage_kv_bytes_per_seq,
+                                      stage_weight_bytes)
+    spec = uniform_decoder("t", n_layers, 512, 8, 4, 2048, 32000)
+    inst = AWS_INSTANCES["g6e.xlarge"]
+    half = n_layers // 2 or 1
+    stages = (Stage(inst, 1, half, first=True),
+              Stage(inst, 1, n_layers - half, last=True))
+    if n_layers == 1:
+        stages = (Stage(inst, 1, 1, first=True, last=True),)
+    p = Placement(spec, stages)
+    b = max_batch_size(spec, p, s_in, s_out)
+    if b == 0:
+        return
+    for stage, (lo, hi) in zip(p.stages, p.layer_ranges()):
+        w = stage_weight_bytes(spec, stage, lo, hi)
+        kv = stage_kv_bytes_per_seq(spec, lo, hi, s_in, s_out)
+        assert w + b * kv <= stage.mem_bytes * 0.9 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_workload_reproducible(seed):
+    from repro.cluster.workload import azure_conversation_like
+    a = azure_conversation_like(duration_s=120, seed=seed)
+    b = azure_conversation_like(duration_s=120, seed=seed)
+    assert [(r.arrival_s, r.s_in, r.s_out) for r in a] == \
+           [(r.arrival_s, r.s_in, r.s_out) for r in b]
+
+
+@settings(max_examples=10, deadline=None)
+@given(minutes=st.integers(100, 500), seed=st.integers(0, 20))
+def test_trace_counts_bounded(minutes, seed):
+    from repro.cluster.spot_trace import PAPER_POOLS, generate_trace
+    tr = generate_trace(PAPER_POOLS, minutes=minutes, seed=seed)
+    for name, series in tr.counts.items():
+        cap = PAPER_POOLS[name].capacity
+        assert series.min() >= 0 and series.max() <= cap
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 4), s=st.sampled_from([16, 32]),
+       nh=st.sampled_from([2, 4]), seed=st.integers(0, 3))
+def test_ring_cache_equivalent_to_linear(b, s, nh, seed):
+    """SWA ring cache decode == linear cache decode with window masking."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    m = build_model(cfg, remat=False, attn_chunk=0)
+    params = m.init(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)
+    l_ring, c_ring = m.prefill(params, {"tokens": toks}, max_len=s + 2,
+                               ring=True)
+    l_lin, c_lin = m.prefill(params, {"tokens": toks}, max_len=s + 2,
+                             ring=False)
+    np.testing.assert_allclose(np.asarray(l_ring), np.asarray(l_lin),
+                               atol=2e-4, rtol=1e-3)
+    nxt = m.sample_greedy(l_ring)[:, None].astype(jnp.int32)
+    d_ring, _ = m.decode_step(params, c_ring, nxt)
+    d_lin, _ = m.decode_step(params, c_lin, nxt)
+    np.testing.assert_allclose(np.asarray(d_ring), np.asarray(d_lin),
+                               atol=2e-4, rtol=1e-3)

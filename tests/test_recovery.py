@@ -1,0 +1,90 @@
+"""Hybrid recovery policy (paper §8.1 future work — beyond-paper feature)."""
+
+import dataclasses
+
+import pytest
+
+from repro.cluster import ClusterSim, FTConfig
+from repro.cluster.recovery import (decide, kv_bytes_for_ctx,
+                                    recompute_seconds, transfer_seconds)
+from repro.cluster.workload import Request
+from repro.configs import get_config
+from repro.core import populate_cluster
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+
+
+@pytest.fixture(scope="module")
+def setup():
+    spec = get_config("llama-3.1-70b").to_modelspec()
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    plan = populate_cluster(spec, paper_cluster(), insts, 763, 232,
+                            beam_k=1)
+    return spec, plan
+
+
+def test_kv_bytes_monotone(setup):
+    spec, _ = setup
+    assert kv_bytes_for_ctx(spec, 2048) > kv_bytes_for_ctx(spec, 512)
+
+
+def test_decide_short_context_recomputes(setup):
+    """Paper Fig 5: recomputation wins at short contexts."""
+    spec, plan = setup
+    p = plan.pipelines[0]
+    d = decide(spec, p, ctx=512, remaining_grace_s=120.0, policy="hybrid")
+    assert d.mechanism == "recompute"
+    assert d.recompute_s < d.transfer_s
+
+
+def test_decide_long_context_transfers_when_slow_compute(setup):
+    """With a heavily derated engine (busy/slow cluster), long contexts tip
+    to transfer — the §8.1 motivation."""
+    spec, plan = setup
+    p = plan.pipelines[0]
+    d = decide(spec, p, ctx=32768, remaining_grace_s=300.0,
+               policy="hybrid", efficiency=0.05)
+    assert d.transfer_s < d.recompute_s
+    assert d.mechanism == "transfer"
+
+
+def test_grace_constraint_forces_recompute(setup):
+    """Paper §5.1: transfer must fit the grace period or we fall back."""
+    spec, plan = setup
+    p = plan.pipelines[0]
+    d = decide(spec, p, ctx=32768, remaining_grace_s=0.5,
+               policy="transfer", efficiency=0.05)
+    assert not d.fits_grace
+    assert d.mechanism == "recompute"
+
+
+def test_policy_recompute_never_transfers(setup):
+    spec, plan = setup
+    p = plan.pipelines[0]
+    d = decide(spec, p, ctx=65536, remaining_grace_s=1e9,
+               policy="recompute", efficiency=1e-3)
+    assert d.mechanism == "recompute"
+
+
+def test_sim_hybrid_not_worse_on_long_contexts(setup):
+    """End-to-end: on a long-context workload under interruptions, the
+    hybrid policy completes at least as many requests as pure
+    recomputation."""
+    spec, plan = setup
+    reqs = [Request(i, 0.0, 2048, 64) for i in range(200)]
+    pool = plan.pipelines[0].stages[0].instance.name
+    events = [(100.0, pool, -1)]
+
+    def run(policy):
+        ft = FTConfig(recovery_policy=policy)
+        sim = ClusterSim(spec, plan.pipelines, ft, mean_s_in=2048,
+                         mean_s_out=64, efficiency=0.05)
+        return sim.run(reqs, duration_s=1200.0, events=events,
+                       offline=True)
+
+    r_rec = run("recompute")
+    r_hyb = run("hybrid")
+    assert len(r_hyb.completed) >= len(r_rec.completed)
+    migrated_h = [r for r in r_hyb.completed + r_hyb.unfinished
+                  if r.migrations]
+    assert migrated_h, "the interruption must affect requests"

@@ -1,0 +1,132 @@
+"""Estimator unit tests: paper Table 2 / Eqs. 1, 4, 5."""
+
+import math
+
+import pytest
+
+from repro.core import estimator, roofline
+from repro.core.modelspec import LayerSpec, uniform_decoder
+from repro.core.estimator import Placement, Stage, estimate, max_batch_size
+from repro.hw.profiles import AWS_INSTANCES, L4, L40S, effective
+
+
+def dense_layer(h=512, nh=8, nkv=4, hd=64, ff=2048, window=None):
+    return LayerSpec("attn+ffn", h, nh, nkv, hd, ff, window=window)
+
+
+def test_decode_ctx_sum_closed_form():
+    # closed form == explicit loop, with and without SWA window
+    for s_in, s_out, win in [(100, 50, None), (100, 50, 64), (10, 200, 64),
+                             (5, 3, 1000)]:
+        expect = sum(min(s_in + t, win) if win else (s_in + t)
+                     for t in range(1, s_out + 1))
+        got = roofline._decode_ctx_sum(s_in, s_out, win)
+        assert got == pytest.approx(expect), (s_in, s_out, win)
+
+
+def test_roofline_latency_is_max_of_terms():
+    l = dense_layer()
+    dev = effective(L4)
+    for op in roofline.layer_op_costs(l, "prefill", 4, 256, 64, 1):
+        lat = op.latency(dev)
+        assert lat == pytest.approx(
+            max(op.flops / dev.flops_bf16, op.scan_bytes / dev.mem_bw))
+
+
+def test_prefill_flops_quadratic_in_seq():
+    l = dense_layer()
+    f1 = roofline.layer_flops(l, "prefill", 1, 1024, 0, 1)
+    f2 = roofline.layer_flops(l, "prefill", 1, 2048, 0, 1)
+    # attention term quadruples, projections double => 2x < ratio < 4x
+    assert 2.0 < f2 / f1 < 4.0
+
+
+def test_swa_caps_decode_attention():
+    def attn_flops(l):
+        ops = roofline.layer_op_costs(l, "decode", 1, 8192, 256, 1)
+        return next(o.flops for o in ops if o.name == "attention")
+    f_full = attn_flops(dense_layer())
+    f_swa = attn_flops(dense_layer(window=128))
+    assert f_swa < f_full * 0.05     # window 128 vs ~8k context
+
+
+def test_moe_flops_active_not_total():
+    moe = LayerSpec("attn+moe", 512, 8, 4, 64, 256, n_experts=16, top_k=2)
+    dense_equal = LayerSpec("attn+ffn", 512, 8, 4, 64, 256 * 2)
+    f_moe = roofline.layer_flops(moe, "prefill", 2, 512, 0, 1)
+    f_dense = roofline.layer_flops(dense_equal, "prefill", 2, 512, 0, 1)
+    # active-expert FFN ~= dense with top_k*d_ff (router adds a little)
+    assert f_moe == pytest.approx(f_dense, rel=0.1)
+
+
+def test_tp_divides_compute():
+    l = dense_layer()
+    f1 = roofline.layer_flops(l, "prefill", 2, 512, 0, 1)
+    f4 = roofline.layer_flops(l, "prefill", 2, 512, 0, 4)
+    assert f4 == pytest.approx(f1 / 4)
+
+
+def _placement(spec, insts=("g6e.xlarge", "g6.12xlarge")):
+    inst = [AWS_INSTANCES[n] for n in insts]
+    half = spec.n_layers // 2
+    stages = (Stage(inst[0], 1, half, first=True),
+              Stage(inst[1], 4, spec.n_layers - half, last=True))
+    return Placement(spec, stages)
+
+
+def test_estimate_pipeline_monotone_batch_latency():
+    spec = uniform_decoder("m", 8, 512, 8, 4, 2048, 32000)
+    p = _placement(spec)
+    lat = []
+    for b in (1, 4, 16):
+        pre, dec = estimator.stage_latencies(spec, p, b, 256, 64)
+        lat.append(max(pre) + max(dec))
+    assert lat[0] < lat[1] < lat[2]
+
+
+def test_throughput_improves_with_batch():
+    spec = uniform_decoder("m", 8, 512, 8, 4, 2048, 32000)
+    p = _placement(spec)
+    r1 = estimate(spec, p, 256, 64, batch=1).throughput_rps
+    r16 = estimate(spec, p, 256, 64, batch=16).throughput_rps
+    assert r16 > r1 * 2     # batching efficiency (paper §4.2.2)
+
+
+def test_max_batch_respects_memory():
+    spec = uniform_decoder("m", 8, 512, 8, 4, 2048, 32000)
+    p = _placement(spec)
+    b = max_batch_size(spec, p, 256, 64, cap=1 << 20)
+    assert b > 0
+    # longer contexts pin more KV per request => smaller feasible batch
+    b_long = max_batch_size(spec, p, 4096, 64, cap=1 << 20)
+    assert b_long < b
+
+
+def test_ssm_batch_independent_of_context():
+    from repro.configs import get_config
+    spec = get_config("mamba2-1.3b").to_modelspec()
+    inst = AWS_INSTANCES["g6e.xlarge"]
+    stages = (Stage(inst, 1, spec.n_layers, first=True, last=True),)
+    p = Placement(spec, stages)
+    b_short = max_batch_size(spec, p, 256, 64, cap=1 << 20)
+    b_long = max_batch_size(spec, p, 16384, 2048, cap=1 << 20)
+    assert b_short > 0 and b_long > 0
+    # attention-free: only activations scale with s_in. A dense model of the
+    # same width collapses much harder under long contexts.
+    dense = uniform_decoder("d", spec.n_layers, 2048, 16, 8, 8192, 50280)
+    pd = Placement(dense, (Stage(inst, 1, dense.n_layers, first=True,
+                                 last=True),))
+    d_short = max_batch_size(dense, pd, 256, 64, cap=1 << 20)
+    d_long = max_batch_size(dense, pd, 16384, 2048, cap=1 << 20)
+    ssm_ratio = b_long / b_short
+    dense_ratio = (d_long / d_short) if d_short else 0.0
+    assert ssm_ratio > dense_ratio * 3
+
+
+def test_eq5_latency_is_bottleneck_sum():
+    spec = uniform_decoder("m", 8, 512, 8, 4, 2048, 32000)
+    p = _placement(spec)
+    perf = estimate(spec, p, 256, 64, batch=4)
+    pre, dec = estimator.stage_latencies(spec, p, 4, 256, 64)
+    assert perf.throughput_rps == pytest.approx(
+        4.0 / (max(pre) + max(dec)))

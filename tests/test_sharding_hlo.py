@@ -1,0 +1,91 @@
+"""Sharding rule resolution + HLO collective parsing."""
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.launch import hlo_utils
+from repro.sharding import rules as R
+
+
+def fake_mesh(shape=(2, 4), axes=("data", "model")):
+    devs = np.array(jax.devices() * (int(np.prod(shape)) // len(
+        jax.devices()) + 1))[: int(np.prod(shape))]
+    return Mesh(devs.reshape(shape), axes)
+
+
+def test_resolve_divisible():
+    mesh = fake_mesh()
+    spec = R.resolve(("batch", None, "heads", None), (8, 16, 8, 64),
+                     R.INFER_RULES, mesh)
+    assert spec == P("data", None, "model", None)
+
+
+def test_resolve_drops_nondivisible():
+    mesh = fake_mesh()
+    # 14 heads % 4 != 0 -> replicate; batch 7 % 2 != 0 -> replicate
+    spec = R.resolve(("batch", None, "heads", None), (7, 16, 14, 64),
+                     R.INFER_RULES, mesh)
+    assert spec == P(None, None, None, None)
+
+
+def test_resolve_no_double_axis_use():
+    mesh = fake_mesh()
+    rules = dict(R.INFER_RULES, cache_seq=("model",))
+    spec = R.resolve(("layers", "batch", "cache_seq", "kv_heads", None),
+                     (24, 8, 1024, 8, 64), rules, mesh)
+    # model axis consumed by cache_seq; kv_heads must NOT reuse it
+    flat = []
+    for e in spec:
+        if isinstance(e, tuple):
+            flat.extend(e)
+        elif e:
+            flat.append(e)
+    assert flat.count("model") == 1
+
+
+def test_resolve_multi_axis_batch():
+    mesh = fake_mesh((2, 2, 2), ("pod", "data", "model"))
+    spec = R.resolve(("batch", None), (8, 16), R.TRAIN_RULES_MULTIPOD, mesh)
+    assert spec[0] == ("pod", "data")
+
+
+SAMPLE_HLO = """
+HloModule test
+
+%region_body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %ar = f32[8,8]{1,0} all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], to_apply=%add.1
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%region_cond (p2: (s32[], f32[8,8])) -> pred[] {
+  ROOT %lt = pred[] compare(%a, %b), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %ag = f32[16,8]{1,0} all-gather(%a), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %w = (s32[], f32[8,8]) while(%init), condition=%region_cond, body=%region_body
+  %cp = f32[8,8]{1,0} collective-permute(%a), source_target_pairs={{0,1},{1,0}}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parse_kinds_and_weighting():
+    out = hlo_utils.collective_bytes(SAMPLE_HLO, trip_hints=(10,))
+    # all-gather: out 16*8*4=512B, P=2 => wire 512*(1/2)=256
+    assert out["all-gather"] == pytest.approx(256.0)
+    # all-reduce in while body, trips 10: out 8*8*4=256B, P=4 =>
+    # wire 2*256*(3/4)=384 per exec, x10
+    assert out["all-reduce"] == pytest.approx(3840.0)
+    # collective-permute: one hop of 256B
+    assert out["collective-permute"] == pytest.approx(256.0)
+    assert out["counts"]["all-reduce"] == 10
+
+
+def test_collective_parse_no_entry_fallback():
+    txt = "%x = f32[4]{0} all-reduce(%y), replica_groups=[1,4]<=[4]"
+    out = hlo_utils.collective_bytes(txt)
+    assert out["all-reduce"] > 0

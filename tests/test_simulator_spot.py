@@ -1,0 +1,123 @@
+"""Cluster simulator + spot trace tests (the paper's §7.2 methodology)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterSim, FTConfig, azure_conversation_like,
+                           generate_trace, select_scenario,
+                           interruption_events_for_window)
+from repro.cluster.spot_trace import PAPER_POOLS, window_score
+from repro.configs import get_config
+from repro.core import populate_cluster
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    cfg = get_config("qwen3-32b")
+    spec = cfg.to_modelspec()
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    plan = populate_cluster(spec, paper_cluster(), insts, 763, 232, beam_k=1)
+    assert len(plan.pipelines) >= 2
+    return spec, plan
+
+
+def _run(spec, plan, ft, events=(), duration=600.0, rate=3.0, seed=3):
+    reqs = azure_conversation_like(duration_s=duration, rate_rps=rate,
+                                   seed=seed)
+    sim = ClusterSim(spec, plan.pipelines, ft)
+    return sim.run(reqs, duration_s=duration, events=events)
+
+
+def test_no_events_completes_requests(cluster):
+    spec, plan = cluster
+    res = _run(spec, plan, FTConfig(use_spot=True))
+    assert res.rps > 0.5
+    assert res.mean("ttft") > 0
+    assert res.mean("tpot") > 0
+
+
+def test_ft_config_ordering(cluster):
+    """Paper Fig 13: OnDemand >= ShuntServe(RM+CI) >= CI >= RM >= NoHandle
+    under interruptions (allowing small simulation noise)."""
+    spec, plan = cluster
+    pool = plan.pipelines[0].stages[0].instance.name
+    events = [(120.0, pool, -1), (300.0, pool, -1)]
+    variants = {
+        "ondemand": (FTConfig(use_spot=False), ()),
+        "shunt": (FTConfig(), events),
+        "ci": (FTConfig(request_migration=False), events),
+        "rm": (FTConfig(concurrent_init=False), events),
+        "nohandle": (FTConfig(request_migration=False,
+                              concurrent_init=False), events),
+    }
+    res = {k: _run(spec, plan, ft, ev, rate=8.0) for k, (ft, ev) in
+           variants.items()}                      # rate saturates the plan
+    rps = {k: r.rps for k, r in res.items()}
+    assert rps["ondemand"] >= rps["shunt"] * 0.95
+    assert rps["shunt"] >= rps["nohandle"] * 0.99
+    assert rps["ci"] >= rps["nohandle"] * 0.99
+    assert rps["rm"] >= rps["nohandle"] * 0.98
+    # structural: CI strictly reduces downtime vs the non-CI variants
+    assert (sum(res["shunt"].downtime_s.values())
+            <= sum(res["nohandle"].downtime_s.values()) + 1e-9)
+
+
+def test_downtime_ci_vs_plain(cluster):
+    spec, plan = cluster
+    pool = plan.pipelines[0].stages[0].instance.name
+    events = [(100.0, pool, -1)]
+    r_ci = _run(spec, plan, FTConfig(), events)
+    r_pl = _run(spec, plan, FTConfig(concurrent_init=False), events)
+    assert sum(r_ci.downtime_s.values()) < sum(r_pl.downtime_s.values())
+    assert r_ci.interruptions == r_pl.interruptions == 1
+
+
+def test_spot_cost_below_ondemand(cluster):
+    spec, plan = cluster
+    r_spot = _run(spec, plan, FTConfig())
+    r_od = _run(spec, plan, FTConfig(use_spot=False))
+    assert r_spot.cost_usd < r_od.cost_usd * 0.6   # ~65% discount configured
+
+
+def test_migration_preserves_progress_counter(cluster):
+    spec, plan = cluster
+    pool = plan.pipelines[0].stages[0].instance.name
+    events = [(60.0, pool, -1)]
+    res = _run(spec, plan, FTConfig(), events, duration=400.0)
+    migrated = [r for r in res.completed + res.unfinished
+                if r.migrations > 0]
+    assert migrated, "interruption should affect at least one request"
+
+
+# ---- spot traces ------------------------------------------------------------
+
+def test_trace_generation_stationary():
+    trace = generate_trace(PAPER_POOLS, minutes=2000, seed=0)
+    # scarce pools are mostly empty; mid-tier mostly available
+    assert np.mean(trace.counts["p6.48xlarge"]) < 0.2
+    g6 = trace.counts["g6.12xlarge"]
+    assert np.mean(g6 > 0) > 0.8
+
+
+def test_scenario_selection_worst_window():
+    trace = generate_trace(PAPER_POOLS, minutes=2000, seed=1)
+    start, score, zero_frac = select_scenario(trace, dur_min=50)
+    assert score >= window_score(trace, 0, 50)
+    assert 0.0 <= zero_frac < 1.0
+    events = interruption_events_for_window(trace, start, 50)
+    assert any(d < 0 for _, _, d in events)
+
+
+def test_workload_statistics():
+    reqs = azure_conversation_like(duration_s=3600, rate_rps=4.67, seed=0)
+    rate = len(reqs) / 3600.0
+    mean_in = np.mean([r.s_in for r in reqs])
+    mean_out = np.mean([r.s_out for r in reqs])
+    assert 3.5 < rate < 6.0
+    assert 500 < mean_in < 1100        # clipping pulls below 763 target
+    assert 150 < mean_out < 330
+    assert max(r.s_in for r in reqs) <= 2048

@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests for the full system: placement -> serving ->
+interruption -> migration -> completion (the paper's pipeline, small scale).
+"""
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.cluster import (ClusterSim, FTConfig, azure_conversation_like)
+from repro.configs import get_config
+from repro.core import Objective, populate_cluster
+from repro.core.baselines import alpaserve_dp, hexgen_genetic, vllm_even
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+from repro.models import build_model
+from repro.serving import GlobalServer, ServeRequest, TensorStore
+
+
+def test_end_to_end_placement_to_serving():
+    """Optimizer places the paper's 70B model on the paper's cluster; the
+    simulator then serves the trace; ShuntServe beats naive baselines."""
+    spec = get_config("llama-3.1-70b").to_modelspec()
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    inv = paper_cluster()
+    shunt = populate_cluster(spec, inv, insts, 763, 232, beam_k=1)
+    vllm = vllm_even(spec, inv, insts, 763, 232)
+    assert shunt.pipelines, "ShuntServe must place the model"
+    reqs = azure_conversation_like(duration_s=240, rate_rps=4.67, seed=0)
+
+    def run(plan):
+        if not plan.pipelines:
+            return 0.0
+        sim = ClusterSim(spec, plan.pipelines, FTConfig(use_spot=True))
+        return sim.run(reqs, duration_s=240, offline=True).rps
+
+    assert run(shunt) >= run(vllm) * 0.99
+
+
+def test_end_to_end_real_engine_with_interruptions():
+    """Real token generation through the global server across an
+    interruption: every request finishes; outputs of migrated requests keep
+    their pre-interruption prefix."""
+    cfg = get_config("qwen2-0.5b").reduced()
+    model = build_model(cfg, remat=False, attn_chunk=0)
+    params = model.init(jax.random.PRNGKey(0))
+    store = TensorStore()
+    srv = GlobalServer(cfg, store, max_batch=2, max_len=64)
+    srv.add_pipeline(params, ["n0", "n1"], weight=1.0)
+    srv.add_pipeline(params, ["n2"], weight=1.0)
+    reqs = [ServeRequest(prompt=[7 + i, 3, 11], max_new_tokens=6)
+            for i in range(6)]
+    for r in reqs:
+        srv.submit(r)
+    for _ in range(2):
+        srv.step()
+    snapshot = {r.rid: list(r.generated) for r in reqs}
+    srv.interrupt_instance("n0")
+    srv.run_until_drained()
+    for r in reqs:
+        assert r.done, r.rid
+        assert list(r.generated)[:len(snapshot[r.rid])] == snapshot[r.rid]
+    assert sum(1 for r in reqs if r.migrations > 0) >= 1
+
+
+def test_baselines_produce_plans():
+    spec = get_config("qwen3-32b").to_modelspec()
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    inv = paper_cluster()
+    for fn in (vllm_even, alpaserve_dp):
+        plan = fn(spec, inv, insts, 763, 232)
+        assert plan.pipelines, fn.__name__
+        for p in plan.pipelines:
+            assert sum(s.n_layers for s in p.stages) == spec.n_layers
+    gen = hexgen_genetic(spec, inv, insts, 763, 232, pop_size=6,
+                         generations=3, seed=0)
+    for p in gen.pipelines:
+        assert sum(s.n_layers for s in p.stages) == spec.n_layers

@@ -7,7 +7,7 @@ form by default; REPRO_FULL=1 enables paper-scale parameters.
   Fig 8  -> bench_estimator_accuracy      Fig 15    -> cost_efficiency
   Fig 9/10 -> bench_placement             Fig 16    -> bench_init_overlap
   Fig 11 -> bench_beam_width              Table 4   -> bench_calibration
-  §Roofline -> roofline_report
+  §Roofline -> roofline_report            §4.2 search -> bench_search_speed
 """
 
 from __future__ import annotations
@@ -26,6 +26,7 @@ def main() -> None:
         ("estimator_accuracy", "benchmarks.bench_estimator_accuracy"),
         ("migration_tradeoff", "benchmarks.bench_migration_tradeoff"),
         ("beam_width", "benchmarks.bench_beam_width"),
+        ("search_speed", "benchmarks.bench_search_speed"),
         ("placement", "benchmarks.bench_placement"),
         ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
         ("init_overlap", "benchmarks.bench_init_overlap"),

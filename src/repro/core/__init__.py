@@ -3,6 +3,7 @@
   * roofline.py   — op-level FLOPs/bytes cost tables (paper Table 2)
   * comm.py       — alpha-beta communication model (Eqs. 2-3)
   * estimator.py  — static latency + throughput estimation (Eqs. 1, 4, 5)
+  * eval_engine.py— prefix-sum cost tables: O(1) stage scoring for search
   * objective.py  — throughput-per-cost objective with SLO penalty (Eq. 7)
   * placement.py  — DP + beam-search placement optimizer (Algorithm 1)
   * cluster_opt.py— iterative pipeline extraction to populate a cluster
@@ -11,13 +12,14 @@
 """
 
 from repro.core.estimator import Placement, PerfEstimate, Stage, estimate
+from repro.core.eval_engine import FastEstimator, StageTable
 from repro.core.modelspec import LayerSpec, ModelSpec, uniform_decoder
 from repro.core.objective import Objective
 from repro.core.placement import PlacementOptimizer, SearchResult
 from repro.core.cluster_opt import ClusterPlan, populate_cluster
 
 __all__ = [
-    "Placement", "PerfEstimate", "Stage", "estimate", "LayerSpec",
-    "ModelSpec", "uniform_decoder", "Objective", "PlacementOptimizer",
-    "SearchResult", "ClusterPlan", "populate_cluster",
+    "Placement", "PerfEstimate", "Stage", "estimate", "FastEstimator",
+    "StageTable", "LayerSpec", "ModelSpec", "uniform_decoder", "Objective",
+    "PlacementOptimizer", "SearchResult", "ClusterPlan", "populate_cluster",
 ]

@@ -3,7 +3,9 @@
 All baselines are *evaluated through the same estimator* as ShuntServe so the
 comparison isolates the placement algorithm (exactly how the paper's offline
 evaluation treats them — each system's algorithm decides the placement, the
-same engine serves it).
+same engine serves it).  Scoring goes through the prefix-sum table engine
+(``repro.core.eval_engine``), which is pinned to the reference estimator by
+tests — so the Fig 9/10 planners all speed up together.
 
   * ``vllm_even``       — vLLM: homogeneous groups, even layer partition,
                           intra-node TP (one pipeline per instance group).
@@ -23,7 +25,8 @@ import random
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.cluster_opt import ClusterPlan
-from repro.core.estimator import Placement, Stage, estimate
+from repro.core.estimator import Placement, Stage
+from repro.core.eval_engine import FastEstimator
 from repro.core.modelspec import ModelSpec
 from repro.core.objective import Objective
 from repro.hw.profiles import InstanceProfile
@@ -40,11 +43,6 @@ def _mark_ends(stages: List[Stage]) -> Tuple[Stage, ...]:
         for i, s in enumerate(stages))
 
 
-def _feasible(spec: ModelSpec, placement: Placement, s_in: int,
-              s_out: int) -> bool:
-    return estimate(spec, placement, s_in, s_out).batch > 0
-
-
 # ---------------------------------------------------------------------------
 # vLLM: per homogeneous instance-type group, TP = intra-node, PP = enough
 # nodes to fit the model, even layer split. One or more identical pipelines
@@ -55,13 +53,13 @@ def vllm_even(spec: ModelSpec, inventory: Dict[str, int],
               s_out: int) -> ClusterPlan:
     import time
     t0 = time.perf_counter()
+    engine = FastEstimator(spec, s_in, s_out)
     pipelines, rps = [], []
     for name, count in inventory.items():
         if count <= 0:
             continue
         inst = instances[name]
         # smallest PP depth whose pipeline fits
-        placed = False
         for d_pp in range(1, count + 1):
             split = _even_split(spec.n_layers, d_pp)
             if any(s <= 0 for s in split):
@@ -69,15 +67,12 @@ def vllm_even(spec: ModelSpec, inventory: Dict[str, int],
             stages = _mark_ends([
                 Stage(inst, inst.num_devices, nl) for nl in split])
             placement = Placement(spec, stages)
-            if _feasible(spec, placement, s_in, s_out):
+            perf = engine.estimate(placement)
+            if perf.batch > 0:
                 n_pipes = count // d_pp
-                for _ in range(n_pipes):
-                    perf = estimate(spec, placement, s_in, s_out)
-                    pipelines.append(placement)
-                    rps.append(perf.throughput_rps)
-                placed = True
+                pipelines.extend([placement] * n_pipes)
+                rps.extend([perf.throughput_rps] * n_pipes)
                 break
-        _ = placed
     return ClusterPlan(pipelines, rps, {}, time.perf_counter() - t0)
 
 
@@ -87,15 +82,13 @@ def vllm_even(spec: ModelSpec, inventory: Dict[str, int],
 # grouping that maximizes aggregate goodput with a replication preference.
 # ---------------------------------------------------------------------------
 def _latency_balanced_split(spec: ModelSpec, inst: InstanceProfile,
-                            d_pp: int, s_in: int, s_out: int) -> List[int]:
-    """DP that minimizes the max per-stage latency over contiguous splits."""
-    from repro.core.roofline import layer_latency
+                            d_pp: int, engine: FastEstimator) -> List[int]:
+    """DP that minimizes the max per-stage latency over contiguous splits.
+
+    Per-layer prefill+decode latency at batch 1 comes from the prefix-sum
+    tables — one row read instead of 2n roofline evaluations."""
     n = spec.n_layers
-    lat = [layer_latency(spec.layers[i], inst.device, "prefill", 1, s_in,
-                         s_out, inst.num_devices, spec.dtype_bytes)
-           + layer_latency(spec.layers[i], inst.device, "decode", 1, s_in,
-                           s_out, inst.num_devices, spec.dtype_bytes)
-           for i in range(n)]
+    lat = engine.table(inst, inst.num_devices).per_layer_latency(0)
     prefix = [0.0]
     for v in lat:
         prefix.append(prefix[-1] + v)
@@ -124,6 +117,7 @@ def alpaserve_dp(spec: ModelSpec, inventory: Dict[str, int],
                  s_out: int, prefer_replication: bool = True) -> ClusterPlan:
     import time
     t0 = time.perf_counter()
+    engine = FastEstimator(spec, s_in, s_out)
     pipelines, rps = [], []
     for name, count in inventory.items():
         if count <= 0:
@@ -134,13 +128,13 @@ def alpaserve_dp(spec: ModelSpec, inventory: Dict[str, int],
             n_rep = count // d_pp
             if n_rep <= 0:
                 continue
-            split = _latency_balanced_split(spec, inst, d_pp, s_in, s_out)
+            split = _latency_balanced_split(spec, inst, d_pp, engine)
             if any(s <= 0 for s in split):
                 continue
             stages = _mark_ends([
                 Stage(inst, inst.num_devices, nl) for nl in split])
             placement = Placement(spec, stages)
-            perf = estimate(spec, placement, s_in, s_out)
+            perf = engine.estimate(placement)
             if perf.batch <= 0:
                 continue
             total = perf.throughput_rps * n_rep
@@ -188,6 +182,7 @@ def hexgen_genetic(spec: ModelSpec, inventory: Dict[str, int],
     t0 = time.perf_counter()
     rng = random.Random(seed)
     objective = objective or Objective()
+    engine = FastEstimator(spec, s_in, s_out)
     dev_inv = {n: c * instances[n].num_devices for n, c in inventory.items()}
 
     def random_genome() -> List[List[Tuple[str, int]]]:
@@ -234,7 +229,7 @@ def hexgen_genetic(spec: ModelSpec, inventory: Dict[str, int],
                 placement = Placement(spec, stages)
             except AssertionError:
                 continue
-            perf = estimate(spec, placement, s_in, s_out)
+            perf = engine.estimate(placement)
             if perf.batch <= 0:
                 continue
             pipelines.append(placement)

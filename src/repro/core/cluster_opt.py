@@ -15,7 +15,8 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.estimator import Placement, estimate
+from repro.core.estimator import Placement
+from repro.core.eval_engine import FastEstimator
 from repro.core.modelspec import ModelSpec
 from repro.core.objective import Objective
 from repro.core.placement import PlacementOptimizer, SearchResult
@@ -44,18 +45,6 @@ class ClusterPlan:
         return [t / tot for t in self.throughputs_rps]
 
 
-def _instances_consumed(placement: Placement) -> Dict[str, int]:
-    """Whole instances consumed by a pipeline (device-count -> ceil insts)."""
-    dev_used: Dict[str, int] = {}
-    for s in placement.stages:
-        dev_used[s.instance.name] = dev_used.get(s.instance.name, 0) + s.tp
-    out = {}
-    for name, devs in dev_used.items():
-        inst = placement.stages[0].instance  # placeholder; fixed below
-        out[name] = devs
-    return out
-
-
 def populate_cluster(spec: ModelSpec, inventory: Dict[str, int],
                      instances: Dict[str, InstanceProfile], s_in: int,
                      s_out: int, objective: Optional[Objective] = None,
@@ -68,13 +57,17 @@ def populate_cluster(spec: ModelSpec, inventory: Dict[str, int],
     pipelines: List[Placement] = []
     rps: List[float] = []
     first_score: Optional[float] = None
+    # one table engine shared by every extraction iteration: the prefix-sum
+    # tables depend only on (spec, s_in, s_out), not on the shrinking
+    # inventory, so re-plans after spot interruptions pay no rebuild cost.
+    engine = FastEstimator(spec, s_in, s_out)
     while len(pipelines) < max_pipelines:
         avail = {n: c for n, c in inv.items() if c > 0}
         if not avail:
             break
         opt = PlacementOptimizer(spec, avail, instances, s_in, s_out,
                                  objective=objective, beam_k=beam_k,
-                                 max_tp=max_tp)
+                                 max_tp=max_tp, engine=engine)
         res = opt.search()
         if res.placement is None or res.throughput_rps <= 0:
             break

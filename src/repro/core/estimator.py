@@ -36,11 +36,6 @@ class Stage:
     def mem_bytes(self) -> float:
         return self.tp * self.device.mem_gb * 1e9
 
-    @property
-    def cost_hr(self, spot: bool = False) -> float:
-        frac = self.tp / self.instance.num_devices
-        return self.instance.price_spot_hr * frac
-
     def price_hr(self, spot: bool) -> float:
         frac = self.tp / self.instance.num_devices
         p = (self.instance.price_spot_hr if spot
@@ -99,6 +94,18 @@ class PerfEstimate:
 
 # ---------------------------------------------------------------------------
 
+# Eq. 6 defaults — the fast engine (repro.core.eval_engine) imports these so
+# the two implementations can never drift apart.
+ACT_HEADROOM = 0.9
+DEFAULT_BATCH_CAP = 512
+
+
+def activation_bytes_per_seq(spec: ModelSpec, s_in: int, tp: int) -> float:
+    """Activation working set one request pins on a stage: a few live
+    (S, H) tensors for prefill; the 4x covers residual + ffn intermediates
+    under remat-free inference."""
+    return 4.0 * s_in * spec.hidden * spec.dtype_bytes / max(1, tp)
+
 
 def stage_weight_bytes(spec: ModelSpec, stage: Stage, lo: int, hi: int) -> float:
     e = spec.dtype_bytes
@@ -131,23 +138,19 @@ def stage_kv_bytes_per_seq(spec: ModelSpec, lo: int, hi: int, s_in: int,
 
 
 def max_batch_size(spec: ModelSpec, placement: Placement, s_in: int,
-                   s_out: int, act_headroom: float = 0.9,
-                   cap: int = 512) -> int:
+                   s_out: int, act_headroom: float = ACT_HEADROOM,
+                   cap: int = DEFAULT_BATCH_CAP) -> int:
     """Paper Eq. 6: largest B satisfying every stage's memory constraint.
 
     Refinement (documented): the activation term scales with B, so we solve
         B = (M*headroom - W) / (kv_per_seq + act_per_seq)
     instead of subtracting a fixed M_activation.
     """
-    e = spec.dtype_bytes
     best = cap
     for stage, (lo, hi) in zip(placement.stages, placement.layer_ranges()):
         w = stage_weight_bytes(spec, stage, lo, hi)
         kv = stage_kv_bytes_per_seq(spec, lo, hi, s_in, s_out)
-        # activation working set per request: a few live (S,H) tensors for
-        # prefill; the 4x covers residual + ffn intermediates under remat-free
-        # inference.
-        act = 4.0 * s_in * spec.hidden * e / max(1, stage.tp)
+        act = activation_bytes_per_seq(spec, s_in, stage.tp)
         avail = stage.mem_bytes * act_headroom - w
         if avail <= 0:
             return 0

@@ -9,6 +9,25 @@ placement — the op-level estimator makes partial pipelines comparable, which
 is what gives the problem (approximate) optimal substructure — and keeps the
 beam's best k.
 
+Two scoring paths:
+
+  * **fast** (default): the prefix-sum table engine
+    (``repro.core.eval_engine``).  A ``_FastPartial`` carries incremental
+    state — the running min of per-stage Eq. 6 batch bounds, the running
+    max/sum of per-stage prefill/decode latency at the current batch —
+    so extending a candidate by one stage composes scalars (O(1) table
+    lookups) instead of re-walking every layer of every stage.  When the
+    pipeline batch changes (a tighter stage appeared), the per-stage
+    terms are rebuilt in O(stages) table lookups.  Beams additionally
+    apply dominance pruning: a candidate whose score is no better and
+    whose inventory use is no smaller (component-wise) than another's is
+    dropped, which both dedups equivalent inventory states and frees
+    beam slots for genuinely different candidates.
+
+  * **reference** (``use_fast=False``): the original per-layer
+    ``estimator.estimate`` scoring, kept as the pinned source of truth
+    (see ``tests/test_fast_engine.py``).
+
 Inventory handling (beyond the paper's pseudocode, required for real
 clusters): each candidate tracks devices consumed per instance type so a
 stage can only be added while inventory remains; one *instance* may host
@@ -26,6 +45,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.estimator import (Placement, Stage, estimate,
                                   max_batch_size)
+from repro.core.eval_engine import FastEstimator, StageTable
 from repro.core.modelspec import ModelSpec
 from repro.core.objective import Objective
 from repro.hw.profiles import InstanceProfile
@@ -57,7 +77,7 @@ def stage_options_for(instances: Sequence[InstanceProfile],
 
 @dataclasses.dataclass(frozen=True)
 class _Partial:
-    """A partial pipeline in the DP table."""
+    """A partial pipeline in the reference-path DP table."""
 
     stages: Tuple[Stage, ...]
     used_devices: Tuple[Tuple[str, int], ...]   # (instance_name, devices)
@@ -65,6 +85,40 @@ class _Partial:
 
     def used(self) -> Dict[str, int]:
         return dict(self.used_devices)
+
+
+class _FastPartial:
+    """A partial pipeline carrying incremental fast-path state.
+
+    The latency aggregates (``sum_pre``/``sum_dec``/``max_pre``/
+    ``max_dec``) are per-stage *base* values at batch ``batch``: they
+    include the stage's layer-segment roofline latency, TP collectives,
+    the first-stage extras on stage 0, and the PP hand-off for every
+    stage (the d_pp>1 convention of Eq. 2) — but exclude the LM-head
+    (logits) extras, which belong to whichever stage is currently last
+    and migrate on every extension (each extension folds them onto the
+    freshly appended stage's locally computed base).  ``m_nonlast`` is
+    the running min over stages of the Eq. 6 bound with *no* stage
+    holding the head, from which the true pipeline batch is
+    min(m_nonlast, last-stage-as-last bound): the head only ever
+    tightens the last stage's own bound.
+    """
+
+    __slots__ = ("segs", "used_d", "score", "batch", "m_nonlast",
+                 "sum_pre", "sum_dec", "max_pre", "max_dec", "cost")
+
+    def __init__(self, segs, used_d, score, batch, m_nonlast, sum_pre,
+                 sum_dec, max_pre, max_dec, cost):
+        self.segs = segs            # tuple of (StageTable, lo, hi)
+        self.used_d = used_d        # {instance_name: devices} — never mutated
+        self.score = score
+        self.batch = batch
+        self.m_nonlast = m_nonlast
+        self.sum_pre = sum_pre
+        self.sum_dec = sum_dec
+        self.max_pre = max_pre
+        self.max_dec = max_dec
+        self.cost = cost
 
 
 @dataclasses.dataclass
@@ -84,7 +138,9 @@ class PlacementOptimizer:
                  instances: Dict[str, InstanceProfile], s_in: int,
                  s_out: int, objective: Optional[Objective] = None,
                  beam_k: int = 3, max_stages: Optional[int] = None,
-                 max_tp: Optional[int] = None, batch_cap: int = 512):
+                 max_tp: Optional[int] = None, batch_cap: int = 512,
+                 use_fast: bool = True, prune_dominated: bool = True,
+                 engine: Optional[FastEstimator] = None):
         self.spec = spec
         # inventory in *device* units per instance type
         self.inventory = {
@@ -98,12 +154,18 @@ class PlacementOptimizer:
         self.options = stage_options_for(
             [instances[n] for n in inventory], max_tp=max_tp)
         self.batch_cap = batch_cap
+        # the fast path inlines the stock Eq. 7 objective; a subclassed
+        # objective falls back to the reference scorer.
+        self.use_fast = use_fast and type(self.objective) is Objective
+        self.prune_dominated = prune_dominated
+        self.engine = engine
         self.evaluated = 0
 
-    # -- scoring -----------------------------------------------------------
+    # -- scoring (reference path) ------------------------------------------
     def _evaluate(self, stages: Tuple[Stage, ...], n_layers_placed: int
                   ) -> Tuple[float, int, float]:
-        """Score a (possibly partial) pipeline.
+        """Score a (possibly partial) pipeline with the reference
+        estimator.
 
         Partial pipelines are scored on the layers placed so far with the
         last stage temporarily holding the LM head, mirroring the paper's
@@ -120,13 +182,20 @@ class PlacementOptimizer:
                                 last=(i == len(stages) - 1))
             for i, s in enumerate(stages))
         placement = Placement(pspec, stages)
-        perf = estimate(pspec, placement, self.s_in, self.s_out)
+        batch = max_batch_size(pspec, placement, self.s_in, self.s_out,
+                               cap=self.batch_cap)
+        perf = estimate(pspec, placement, self.s_in, self.s_out, batch=batch)
         self.evaluated += 1
         score = self.objective.score(placement, perf)
         return score, perf.batch, perf.throughput_rps
 
     # -- Algorithm 1 ---------------------------------------------------------
     def search(self) -> SearchResult:
+        if self.use_fast:
+            return self._search_fast()
+        return self._search_reference()
+
+    def _search_reference(self) -> SearchResult:
         t0 = time.perf_counter()
         n_l = self.spec.n_layers
         # DP[l][s] -> beam (list of _Partial, best first)
@@ -156,7 +225,7 @@ class PlacementOptimizer:
                         new = _Partial(stages, tuple(sorted(used.items())),
                                        score)
                         self._update(dp, (l, s_new), new)
-        return self._extract(dp, t0)
+        return self._extract_reference(dp, t0)
 
     def _update(self, dp, key, cand: _Partial) -> None:
         beam = dp.setdefault(key, [])
@@ -164,7 +233,7 @@ class PlacementOptimizer:
         beam.sort(key=lambda c: -c.score)
         del beam[self.beam_k:]
 
-    def _extract(self, dp, t0) -> SearchResult:
+    def _extract_reference(self, dp, t0) -> SearchResult:
         n_l = self.spec.n_layers
         best: Optional[_Partial] = None
         for s in range(1, self.max_stages + 1):
@@ -174,25 +243,219 @@ class PlacementOptimizer:
         wall = time.perf_counter() - t0
         if best is None:
             return SearchResult(None, 0.0, 0, 0.0, wall, self.evaluated)
+        return self._finish(best.stages, best.score, wall)
+
+    def _finish(self, stages: Tuple[Stage, ...], score: float,
+                wall: float) -> SearchResult:
         stages = tuple(
             dataclasses.replace(st, first=(i == 0),
-                                last=(i == len(best.stages) - 1))
-            for i, st in enumerate(best.stages))
+                                last=(i == len(stages) - 1))
+            for i, st in enumerate(stages))
         placement = Placement(self.spec, stages)
-        perf = estimate(self.spec, placement, self.s_in, self.s_out)
-        return SearchResult(placement, best.score, perf.batch,
+        batch = max_batch_size(self.spec, placement, self.s_in, self.s_out,
+                               cap=self.batch_cap)
+        perf = estimate(self.spec, placement, self.s_in, self.s_out,
+                        batch=batch)
+        return SearchResult(placement, score, perf.batch,
                             perf.throughput_rps, wall, self.evaluated)
+
+    # -- fast path ---------------------------------------------------------
+    def _search_fast(self) -> SearchResult:
+        t0 = time.perf_counter()
+        if (self.engine is None
+                or self.engine.spec is not self.spec
+                or (self.engine.s_in, self.engine.s_out)
+                != (self.s_in, self.s_out)
+                or self.engine.batch_cap != self.batch_cap):
+            self.engine = FastEstimator(self.spec, self.s_in, self.s_out,
+                                        self.batch_cap)
+        obj = self.objective
+        spot = obj.spot_pricing
+        tables = [self.engine.table(o.instance, o.tp) for o in self.options]
+        opt_meta = [(t, o.instance.name, o.tp,
+                     t.price_spot if spot else t.price_od)
+                    for t, o in zip(tables, self.options)]
+        n_l = self.spec.n_layers
+        cap = self.batch_cap
+        root = _FastPartial((), {}, 0.0, 0, cap, 0.0, 0.0, 0.0, 0.0, 0.0)
+        dp: Dict[Tuple[int, int], List[_FastPartial]] = {(0, 0): [root]}
+        inventory = self.inventory
+        for l in range(1, n_l + 1):
+            for lprime in range(0, l):
+                for s in range(0, min(lprime + 1, self.max_stages)):
+                    beam = dp.get((lprime, s))
+                    if not beam:
+                        continue
+                    first = s == 0
+                    key_new = (l, s + 1)
+                    for table, name, tp, price in opt_meta:
+                        inv_t = inventory.get(name, 0)
+                        if tp > inv_t:
+                            continue
+                        nb_nl = table.bound(lprime, l, first, False)
+                        nb_l = table.bound(lprime, l, first, True)
+                        for cand in beam:
+                            if cand.used_d.get(name, 0) + tp > inv_t:
+                                continue
+                            new = self._extend_fast(cand, table, lprime, l,
+                                                    nb_nl, nb_l, price,
+                                                    name, tp)
+                            self.evaluated += 1
+                            if new.batch <= 0 and l == n_l:
+                                continue
+                            self._update_fast(dp, key_new, new)
+        return self._extract_fast(dp, t0)
+
+    def _extend_fast(self, cand: _FastPartial, table: StageTable, lo: int,
+                     hi: int, nb_nl: int, nb_l: int, price: float,
+                     name: str, tp: int) -> _FastPartial:
+        k = len(cand.segs)
+        segs = cand.segs + ((table, lo, hi),)
+        used_d = dict(cand.used_d)
+        used_d[name] = used_d.get(name, 0) + tp
+        cost = cand.cost + price
+        m_nonlast = nb_nl if nb_nl < cand.m_nonlast else cand.m_nonlast
+        batch = nb_l if nb_l < cand.m_nonlast else cand.m_nonlast
+        if batch <= 0:
+            return _FastPartial(segs, used_d, 0.0, 0, m_nonlast, 0.0, 0.0,
+                                0.0, 0.0, cost)
+        bidx = batch - 1
+        if k == 0:
+            base_pre = (table.seg_pre(lo, hi, bidx) + table.pp_pre[bidx]
+                        + table.first_pre[bidx])
+            base_dec = table.seg_dec(lo, hi, bidx) + table.pp_dec[bidx]
+            sum_pre, sum_dec = base_pre, base_dec
+            max_pre, max_dec = base_pre, base_dec
+        elif batch == cand.batch:
+            # O(1) composition: every cached aggregate is valid at `batch`
+            base_pre = table.seg_pre(lo, hi, bidx) + table.pp_pre[bidx]
+            base_dec = table.seg_dec(lo, hi, bidx) + table.pp_dec[bidx]
+            sum_pre = cand.sum_pre + base_pre
+            sum_dec = cand.sum_dec + base_dec
+            max_pre = base_pre if base_pre > cand.max_pre else cand.max_pre
+            max_dec = base_dec if base_dec > cand.max_dec else cand.max_dec
+        else:
+            # the new stage changed the Eq. 6 batch: rebuild the per-stage
+            # terms at the new batch (O(stages) table lookups, no layer loop)
+            sum_pre = sum_dec = max_pre = max_dec = 0.0
+            base_pre = base_dec = 0.0
+            for j, (t, l0, l1) in enumerate(segs):
+                bp = t.seg_pre(l0, l1, bidx) + t.pp_pre[bidx]
+                bd = t.seg_dec(l0, l1, bidx) + t.pp_dec[bidx]
+                if j == 0:
+                    bp += t.first_pre[bidx]
+                sum_pre += bp
+                sum_dec += bd
+                if bp > max_pre:
+                    max_pre = bp
+                if bd > max_dec:
+                    max_dec = bd
+                base_pre, base_dec = bp, bd
+        # score the pipeline with the new stage holding the LM head
+        lpre_x = table.last_pre[bidx]
+        ldec_x = table.last_dec[bidx]
+        if k == 0:
+            # single-stage pipeline: no PP hand-off at all (Eq. 2)
+            p0 = base_pre - table.pp_pre[bidx] + lpre_x
+            d0 = base_dec - table.pp_dec[bidx] + ldec_x
+            tot_pre, tot_dec = p0, d0
+            bn_pre, bn_dec = p0, d0
+        else:
+            tot_pre = sum_pre + lpre_x
+            tot_dec = sum_dec + ldec_x
+            lp = base_pre + lpre_x
+            ld = base_dec + ldec_x
+            bn_pre = lp if lp > max_pre else max_pre
+            bn_dec = ld if ld > max_dec else max_dec
+        l_b = bn_pre + bn_dec
+        rps = batch / l_b if l_b > 0 else 0.0
+        score = self._score_fast(rps, tot_pre + tot_dec, cost)
+        return _FastPartial(segs, used_d, score, batch, m_nonlast, sum_pre,
+                            sum_dec, max_pre, max_dec, cost)
+
+    def _score_fast(self, rps: float, e2e: float, cost: float) -> float:
+        """Inline of Objective.score (Eq. 7) on engine scalars."""
+        obj = self.objective
+        if rps <= 0:
+            return 0.0
+        base = rps / cost if obj.per_cost else rps
+        if obj.gamma == 0.0 or math.isinf(obj.slo_s):
+            return base
+        violation = max(0.0, e2e / obj.slo_s - 1.0)
+        if math.isinf(obj.gamma):
+            return 0.0 if violation > 0 else base
+        return base * max(0.0, 1.0 - obj.gamma * violation)
+
+    def _update_fast(self, dp, key, cand: _FastPartial) -> None:
+        beam = dp.setdefault(key, [])
+        if self.prune_dominated:
+            # b dominates cand iff b is weakly better on every quantity an
+            # extension's score can depend on: current score, Eq. 6 batch
+            # headroom (m_nonlast — without it a zero-score-but-recoverable
+            # partial would be pruned by a zero-score permanently-infeasible
+            # one), realized batch and base bottleneck latencies (the score
+            # alone can be temporarily depressed by the migrating LM-head
+            # extras), and per-type inventory use.
+            for b in beam:
+                if _dominates(b, cand):
+                    return                      # cand is dominated
+            beam[:] = [b for b in beam if not _dominates(cand, b)]
+        beam.append(cand)
+        beam.sort(key=_neg_score)
+        del beam[self.beam_k:]
+
+    def _extract_fast(self, dp, t0) -> SearchResult:
+        n_l = self.spec.n_layers
+        best: Optional[_FastPartial] = None
+        for s in range(1, self.max_stages + 1):
+            for cand in dp.get((n_l, s), []):
+                if best is None or cand.score > best.score:
+                    best = cand
+        wall = time.perf_counter() - t0
+        if best is None:
+            return SearchResult(None, 0.0, 0, 0.0, wall, self.evaluated)
+        stages = tuple(Stage(t.instance, t.tp, hi - lo)
+                       for t, lo, hi in best.segs)
+        return self._finish(stages, best.score, wall)
+
+
+def _neg_score(c) -> float:
+    return -c.score
+
+
+def _dominates(a: "_FastPartial", b: "_FastPartial") -> bool:
+    """a dominates b: weakly better score, batch headroom, realized batch,
+    base bottleneck latencies (comparable since a.batch >= b.batch and
+    latency is monotone in batch) and inventory use."""
+    return (a.score >= b.score and a.m_nonlast >= b.m_nonlast
+            and a.batch >= b.batch
+            and a.max_pre <= b.max_pre and a.max_dec <= b.max_dec
+            and _used_leq(a.used_d, b.used_d))
+
+
+def _used_leq(a: Dict[str, int], b: Dict[str, int]) -> bool:
+    """True iff a uses no more devices than b of every instance type."""
+    for name, d in a.items():
+        if d > b.get(name, 0):
+            return False
+    return True
 
 
 def exhaustive_search(spec: ModelSpec, inventory: Dict[str, int],
                       instances: Dict[str, InstanceProfile], s_in: int,
                       s_out: int, objective: Optional[Objective] = None,
-                      max_stages: int = 4) -> SearchResult:
+                      max_stages: int = 4,
+                      engine: Optional[FastEstimator] = None) -> SearchResult:
     """Brute-force reference used by tests on tiny problems (the paper's
-    'intractable exhaustive search' — only viable for a handful of layers)."""
+    'intractable exhaustive search' — only viable for a handful of layers).
+
+    Scoring goes through the prefix-sum engine, which makes the paper's
+    Fig 11 'exhaustive' yardstick reach a few more layers before blowing up.
+    """
     objective = objective or Objective()
     opts = stage_options_for([instances[n] for n in inventory])
     inv = {n: c * instances[n].num_devices for n, c in inventory.items()}
+    engine = engine or FastEstimator(spec, s_in, s_out)
     n_l = spec.n_layers
     best, best_score = None, -1.0
     evaluated = 0
@@ -223,7 +486,7 @@ def exhaustive_search(spec: ModelSpec, inventory: Dict[str, int],
                           last=(i == k - 1))
                     for i, (o, nl) in enumerate(zip(combo, part)))
                 placement = Placement(spec, stages)
-                perf = estimate(spec, placement, s_in, s_out)
+                perf = engine.estimate(placement)
                 evaluated += 1
                 sc = objective.score(placement, perf)
                 if sc > best_score:

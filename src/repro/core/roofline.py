@@ -19,7 +19,10 @@ Decode rows sum over output iterations t = 1..S_out in closed form:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core.modelspec import LayerSpec, ModelSpec
 from repro.hw.profiles import DeviceProfile
@@ -28,13 +31,13 @@ from repro.hw.profiles import DeviceProfile
 @dataclasses.dataclass
 class OpCost:
     name: str
-    flops: float
+    flops: float                # scalar, or ndarray over a batch axis
     scan_bytes: float           # MemScanCost * E  (already in bytes)
 
     def latency(self, dev: DeviceProfile) -> float:
         lc = self.flops / dev.flops_bf16
         lm = self.scan_bytes / dev.mem_bw
-        return max(lc, lm)
+        return np.maximum(lc, lm)
 
 
 def _decode_ctx_sum(s_in: int, s_out: int, window: Optional[int]) -> float:
@@ -121,7 +124,7 @@ def _ffn_op_costs(l: LayerSpec, total_tokens: float, d_tp: int, e: int,
                 OpCost("ffn_down", flops_dn, scan_dn)]
     # MoE
     k = l.top_k
-    active_experts = min(l.n_experts, token_batch * k)
+    active_experts = np.minimum(l.n_experts, token_batch * k)
     flops_up = 2.0 * up_mats * total_tokens * k * H * F / d_tp
     flops_dn = 2.0 * total_tokens * k * H * F / d_tp
     router = 2.0 * total_tokens * H * l.n_experts
@@ -177,9 +180,6 @@ def logits_op_cost(spec: ModelSpec, phase: str, batch: int, s_in: int,
     return OpCost("logits", flops, scan)
 
 
-import functools
-
-
 @functools.lru_cache(maxsize=1 << 18)
 def layer_latency(l: LayerSpec, dev: DeviceProfile, phase: str, batch: int,
                   s_in: int, s_out: int, d_tp: int, e: int = 2) -> float:
@@ -187,6 +187,22 @@ def layer_latency(l: LayerSpec, dev: DeviceProfile, phase: str, batch: int,
     DP's ~1e5 partial-placement evaluations hit this cache constantly."""
     return sum(op.latency(dev)
                for op in layer_op_costs(l, phase, batch, s_in, s_out, d_tp, e))
+
+
+def layer_latency_array(l: LayerSpec, dev: DeviceProfile, phase: str,
+                        batches: np.ndarray, s_in: int, s_out: int,
+                        d_tp: int, e: int = 2) -> np.ndarray:
+    """Vectorized :func:`layer_latency` over a batch-size axis.
+
+    The Table 2 formulas are linear (or piecewise-linear, for MoE active
+    experts) in the batch, so they broadcast directly over a numpy batch
+    vector; one call evaluates the whole Eq. 6 batch grid that the
+    placement-search prefix-sum tables (``repro.core.eval_engine``) need.
+    """
+    out = np.zeros_like(batches, dtype=np.float64)
+    for op in layer_op_costs(l, phase, batches, s_in, s_out, d_tp, e):
+        out += op.latency(dev)
+    return out
 
 
 def layer_flops(l: LayerSpec, phase: str, batch: int, s_in: int, s_out: int,

@@ -55,12 +55,7 @@ def _cost_analysis_dict(compiled) -> Dict[str, float]:
         ca = compiled.cost_analysis()
     except Exception as e:
         return {"error": repr(e)}
-    if ca is None:
-        return {}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    return {k: float(v) for k, v in ca.items()
-            if isinstance(v, (int, float))}
+    return hlo_costs.normalize_cost_analysis(ca)
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,

@@ -41,7 +41,7 @@ def measure(arch: str, shape_name: str, multi_pod: bool = False,
     hlo = compiled.as_text()
     coll = hlo_utils.collective_bytes(hlo, built.trip_hints)
     tw = hlo_costs.trip_weighted_costs(hlo, built.trip_hints)
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_costs.normalize_cost_analysis(compiled.cost_analysis())
     analytic = analytic_min_bytes(arch, shape_name) / chips
     hbm = max(float(ca.get("bytes accessed", 0.0)), analytic)
     mf = model_flops_for(arch, shape_name)

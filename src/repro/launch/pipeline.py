@@ -40,6 +40,29 @@ def pp_supported(cfg: ArchConfig) -> bool:
             and not cfg.is_encdec)
 
 
+def _shard_map(f, mesh, axis_names, in_specs, out_specs):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer JAX exposes top-level ``jax.shard_map(axis_names=..., check_vma=...)``
+    with partial-auto sharding: manual over ``axis_names``, GSPMD-auto over
+    the rest.  Older releases only have
+    ``jax.experimental.shard_map.shard_map``, whose partial-auto mode
+    (``auto=``) trips an XLA SPMD-partitioner crash on replicated operands,
+    so there we fall back to *fully manual* collectives: every mesh axis is
+    manual and the specs' unmentioned axes are replicated.  Semantics are
+    identical; only the intra-stage auto-TP sharding is lost on old JAX.
+    The replication check is disabled either way (ppermute over uneven
+    pipeline stages is not replication-checkable).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, axis_names=set(axis_names),
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 # ---------------------------------------------------------------------------
 # layer split (uneven, estimator-driven)
 # ---------------------------------------------------------------------------
@@ -190,12 +213,15 @@ def build_pp_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
         h, (ck_n, cv_n) = jax.lax.scan(layer, x, (trunk, ck_s, cv_s, mask))
         return h, ck_n, cv_n
 
-    def _body(params, cache_k, cache_v, tokens_m, pos):
+    def _body(params, cache_k, cache_v, tokens_m, pos, stage_id):
         """shard_map body: manual over pod; tokens_m: (M, mb, 1)."""
         trunk = jax.tree.map(lambda a: a[0], params["layers"])   # strip pod
         mask = params["pp_mask"][0]
         ck, cv = cache_k[0], cache_v[0]            # (lmax, M, mb, S, nkv, hd)
-        p_idx = jax.lax.axis_index("pod")
+        # the stage index arrives as a pod-sharded input rather than
+        # lax.axis_index: axis_index lowers to a PartitionId HLO that the
+        # SPMD partitioner rejects under partial-auto shard_map on older JAX
+        p_idx = stage_id[0]
         last = n_stages - 1
         h_dim = cfg.d_model
         recv = jnp.zeros((mb, 1, h_dim), model.dtype)
@@ -246,18 +272,18 @@ def build_pp_serve_step(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh,
                 if k not in ("layers", "pp_mask")}
         tokens_m = tokens.reshape(m, mb, 1)
 
-        def body_with_rest(pod_part, rest_part, ck, cv, toks, pos):
-            return _body({**pod_part, **rest_part}, ck, cv, toks, pos)
+        def body_with_rest(pod_part, rest_part, ck, cv, toks, pos, sid):
+            return _body({**pod_part, **rest_part}, ck, cv, toks, pos, sid)
 
-        smapped = jax.shard_map(
-            body_with_rest, mesh=mesh, axis_names={"pod"},
+        smapped = _shard_map(
+            body_with_rest, mesh, ("pod",),
             in_specs=(jax.tree.map(lambda _: P("pod"), pod_sharded),
                       jax.tree.map(lambda _: P(), rest),
-                      P("pod"), P("pod"), P(), P()),
-            out_specs=(P(), P("pod"), P("pod")),
-            check_vma=False)
+                      P("pod"), P("pod"), P(), P(), P("pod")),
+            out_specs=(P(), P("pod"), P("pod")))
+        stage_ids = jnp.arange(n_stages, dtype=jnp.int32)
         outs, ck, cv = smapped(pod_sharded, rest, cache["k"], cache["v"],
-                               tokens_m, cache["pos"])
+                               tokens_m, cache["pos"], stage_ids)
         new_cache = {"k": ck, "v": cv, "pos": cache["pos"] + 1}
         return outs.reshape(b, 1), new_cache
 

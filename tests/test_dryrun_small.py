@@ -20,6 +20,7 @@ SCRIPT = textwrap.dedent("""
     from repro.configs.shapes import ShapeSpec
     from repro.launch.steps import build_step, lower_step
     from repro.launch import hlo_utils
+    from repro.launch.hlo_costs import normalize_cost_analysis
 
     out = {}
     cfg = get_config("internlm2-1.8b").reduced()
@@ -29,7 +30,7 @@ SCRIPT = textwrap.dedent("""
                   ShapeSpec("d", 64, 8, "serve_step")]:
         built = build_step(cfg, shape, mesh, attn_chunk=32)
         comp = lower_step(built, mesh).compile()
-        ca = comp.cost_analysis()
+        ca = normalize_cost_analysis(comp.cost_analysis())
         cb = hlo_utils.collective_bytes(comp.as_text(), built.trip_hints)
         out[shape.step] = {"flops": ca.get("flops", -1.0),
                            "coll": cb["total"]}

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_costs import parse_costs, trip_weighted_costs
+from repro.launch.hlo_costs import (normalize_cost_analysis, parse_costs,
+                                    trip_weighted_costs)
 
 SAMPLE = """
 HloModule m
@@ -66,5 +67,7 @@ def test_xla_cost_analysis_counts_scan_body_once():
     a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     ws = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
     comp = jax.jit(scanned).lower(a, ws).compile()
-    ca = comp.cost_analysis()
+    # cost_analysis() is a dict on older JAX, a list of per-computation
+    # dicts on newer JAX — normalize before poking at it
+    ca = normalize_cost_analysis(comp.cost_analysis())
     assert ca["flops"] == pytest.approx(2 * 64 ** 3, rel=0.02)

@@ -1,11 +1,18 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an *optional* dev dependency (see pytest.ini): the module
+skips cleanly when it is not installed so the tier-1 suite still collects.
+"""
 
 import math
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip("hypothesis")
+
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import comm, roofline
 from repro.core.estimator import Placement, Stage, estimate, max_batch_size

@@ -1,0 +1,114 @@
+"""Execution-plane engine throughput — admission (prefill) tok/s, retrace
+count, and decode tok/s on a mixed-length workload.
+
+Compares the v2 bucketed/batched admission path against the seed engine's
+per-request batch-1 path (``admission="legacy"``): the seed traces one
+prefill per distinct prompt length and scatters the cache key-by-key in
+Python, so admission — which bounds how fast surviving pipelines absorb
+migration re-prefill load (SpotServe/ThunderServe observation) — is orders
+of magnitude below the roofline. The bucketed engine must show >= 5x
+admission throughput with a trace count bounded by the bucket count
+(enforced by benchmarks/check_smoke.py in CI).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows, save_json
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, ServeRequest
+
+N_REQUESTS = 32
+MAX_NEW = 2
+MAX_LEN = 64
+
+
+def _workload(cfg, seed: int):
+    rng = np.random.RandomState(seed)
+    lens = rng.randint(4, 49, size=N_REQUESTS)
+    return [ServeRequest(
+        prompt=rng.randint(0, cfg.vocab, size=int(n)).tolist(),
+        max_new_tokens=MAX_NEW) for n in lens]
+
+
+def _admit_and_decode(cfg, params, admission: str) -> Dict:
+    eng = Engine(cfg, params, max_batch=N_REQUESTS, max_len=MAX_LEN,
+                 admission=admission)
+    reqs = _workload(cfg, seed=7)
+    prompt_toks = sum(len(r.prompt) for r in reqs)
+    t0 = time.perf_counter()
+    admitted = eng.admit_many(reqs)
+    t_admit = time.perf_counter() - t0
+    assert len(admitted) == N_REQUESTS
+    t0 = time.perf_counter()
+    eng.drain()
+    t_decode = time.perf_counter() - t0
+    dec_toks = eng.stats.tokens_out - N_REQUESTS   # first tokens <- prefill
+    return {
+        "admission": admission,
+        "admit_s": t_admit,
+        "admit_tok_s": prompt_toks / t_admit,
+        "decode_tok_s": dec_toks / max(t_decode, 1e-9),
+        "prefill_retraces": eng.stats.prefill_retraces,
+        "prefill_batches": eng.stats.prefill_batches,
+        "bucket_count": len(eng.bucket_lens()),
+    }
+
+
+def _chunked_admission(cfg, params) -> Dict:
+    """Migration-recompute shape: long contexts admitted chunk-by-chunk
+    while short live requests keep decoding (head-of-line bound)."""
+    eng = Engine(cfg, params, max_batch=8, max_len=MAX_LEN,
+                 prefill_chunk=16)
+    rng = np.random.RandomState(11)
+    live = [ServeRequest(prompt=rng.randint(0, cfg.vocab, 6).tolist(),
+                         max_new_tokens=12) for _ in range(4)]
+    eng.admit_many(live)
+    migrated = []
+    for _ in range(4):
+        r = ServeRequest(prompt=rng.randint(0, cfg.vocab, 40).tolist(),
+                         max_new_tokens=16)
+        r.generated = rng.randint(0, cfg.vocab, 8).tolist()
+        migrated.append(r)
+    t0 = time.perf_counter()
+    eng.admit_many(migrated)
+    eng.drain()
+    wall = time.perf_counter() - t0
+    return {"wall_s": wall, "prefill_chunks": eng.stats.prefill_chunks,
+            "decode_steps": eng.stats.decode_steps}
+
+
+def run(rows: Rows) -> Dict:
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg, remat=False, attn_chunk=0)
+    params = model.init(jax.random.PRNGKey(0))
+    out: Dict = {}
+    for admission in ("legacy", "bucketed"):
+        r = _admit_and_decode(cfg, params, admission)
+        out[admission] = r
+        rows.add(f"engine_throughput/{admission}/admit",
+                 r["admit_s"] * 1e6,
+                 f"tok_s={r['admit_tok_s']:.0f} "
+                 f"retraces={r['prefill_retraces']} "
+                 f"batches={r['prefill_batches']}")
+        rows.add(f"engine_throughput/{admission}/decode", 0.0,
+                 f"tok_s={r['decode_tok_s']:.0f}")
+    speedup = (out["legacy"]["admit_s"] / out["bucketed"]["admit_s"]
+               if out["bucketed"]["admit_s"] > 0 else 0.0)
+    out["admit_speedup"] = speedup
+    rows.add("engine_throughput/admit_speedup", 0.0,
+             f"speedup={speedup:.1f}x "
+             f"buckets={out['bucketed']['bucket_count']}")
+    out["chunked"] = _chunked_admission(cfg, params)
+    rows.add("engine_throughput/chunked/admit",
+             out["chunked"]["wall_s"] * 1e6,
+             f"chunks={out['chunked']['prefill_chunks']} "
+             f"decode_steps={out['chunked']['decode_steps']}")
+    save_json("engine_throughput.json", out)
+    return out

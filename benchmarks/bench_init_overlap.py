@@ -38,13 +38,13 @@ def run(rows: Rows) -> Dict:
     t0 = time.perf_counter()
     params2 = model.init(jax.random.PRNGKey(0))
     jax.block_until_ready(jax.tree.leaves(params2)[0])
-    eng2 = Engine(cfg, params2, max_batch=2, max_len=64)
+    Engine(cfg, params2, max_batch=2, max_len=64)
     t_engine_cold = time.perf_counter() - t0
 
     # engine init WITH store (attach, no weight reload)
     t0 = time.perf_counter()
     attached = store.attach(cfg.name, "full")
-    eng = Engine(cfg, attached, max_batch=2, max_len=64)
+    Engine(cfg, attached, max_batch=2, max_len=64)
     t_engine_attach = time.perf_counter() - t0
 
     # virtual-clock downtime: CI vs sequential (paper components)

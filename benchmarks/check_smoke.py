@@ -1,0 +1,93 @@
+"""CI benchmark-smoke gate: parse a ``benchmarks.run`` Rows CSV and fail
+the build when a protected performance floor regresses.
+
+  python -m benchmarks.check_smoke <rows.csv>
+
+Enforced floors:
+  * paper-cluster qwen3-32b placement search <= 10 s at every beam width
+    (protects the PR-1 prefix-sum engine's 27x win);
+  * bucketed admission >= 5x the seed (legacy) engine on the mixed-length
+    32-request workload, with prefill traces bounded by the bucket count
+    (protects the PR-2 shape-stable execution plane).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from typing import Dict, List, Tuple
+
+SEARCH_BUDGET_S = 10.0        # k<=3 paper-cluster search (PR-1 quoted 3.2s)
+SEARCH_BUDGET_K8_S = 40.0     # k=8 stress row (seed took > 80s)
+MIN_ADMIT_SPEEDUP = 5.0
+
+
+def parse_rows(text: str) -> List[Tuple[str, float, str]]:
+    rows = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) < 2 or parts[0] == "name":
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append((parts[0], us, parts[2] if len(parts) > 2 else ""))
+    return rows
+
+
+def derived_floats(derived: str) -> Dict[str, float]:
+    return {k: float(v) for k, v in
+            re.findall(r"(\w+)=([-+0-9.eE]+)x?\b", derived)}
+
+
+def check(rows: List[Tuple[str, float, str]]) -> List[str]:
+    failures = []
+    search = [(n, us) for n, us, _ in rows
+              if n.startswith("search_speed/24gpu_3type/qwen3-32b/")]
+    if not search:
+        failures.append("no search_speed qwen3-32b rows found")
+    for name, us in search:
+        budget = SEARCH_BUDGET_K8_S if name.endswith("/k8") \
+            else SEARCH_BUDGET_S
+        if us > budget * 1e6:
+            failures.append(
+                f"{name}: {us/1e6:.1f}s > {budget:.0f}s budget")
+    speed = [d for n, _, d in rows if n == "engine_throughput/admit_speedup"]
+    if not speed:
+        failures.append("no engine_throughput/admit_speedup row found")
+    else:
+        vals = derived_floats(speed[0])
+        if vals.get("speedup", 0.0) < MIN_ADMIT_SPEEDUP:
+            failures.append(
+                f"admission speedup {vals.get('speedup')}x < "
+                f"{MIN_ADMIT_SPEEDUP}x floor")
+    for n, _, d in rows:
+        if n == "engine_throughput/bucketed/admit":
+            vals = derived_floats(d)
+            buckets = [derived_floats(dd).get("buckets", 0.0)
+                       for nn, _, dd in rows
+                       if nn == "engine_throughput/admit_speedup"]
+            if buckets and vals.get("retraces", 1e9) > buckets[0]:
+                failures.append(
+                    f"bucketed prefill retraces {vals.get('retraces')} "
+                    f"exceed bucket count {buckets[0]}")
+    errors = [n for n, _, _ in rows if n.endswith("/ERROR")]
+    failures += [f"suite error row: {n}" for n in errors]
+    return failures
+
+
+def main() -> None:
+    path = sys.argv[1]
+    with open(path) as f:
+        rows = parse_rows(f.read())
+    failures = check(rows)
+    if failures:
+        for f_ in failures:
+            print(f"[check_smoke] FAIL: {f_}")
+        sys.exit(1)
+    print(f"[check_smoke] OK: {len(rows)} rows within budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,7 @@ form by default; REPRO_FULL=1 enables paper-scale parameters.
   Fig 9/10 -> bench_placement             Fig 16    -> bench_init_overlap
   Fig 11 -> bench_beam_width              Table 4   -> bench_calibration
   §Roofline -> roofline_report            §4.2 search -> bench_search_speed
+  §5 exec plane -> bench_engine_throughput
 """
 
 from __future__ import annotations
@@ -27,6 +28,7 @@ def main() -> None:
         ("migration_tradeoff", "benchmarks.bench_migration_tradeoff"),
         ("beam_width", "benchmarks.bench_beam_width"),
         ("search_speed", "benchmarks.bench_search_speed"),
+        ("engine_throughput", "benchmarks.bench_engine_throughput"),
         ("placement", "benchmarks.bench_placement"),
         ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
         ("init_overlap", "benchmarks.bench_init_overlap"),

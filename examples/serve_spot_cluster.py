@@ -18,7 +18,9 @@ model = build_model(cfg, remat=False, attn_chunk=0)
 params = model.init(jax.random.PRNGKey(0))
 
 store = TensorStore()
-srv = GlobalServer(cfg, store, max_batch=3, max_len=96)
+# prefill_chunk: long migration-recompute contexts admit chunk-by-chunk
+# between decode steps instead of stalling live slots
+srv = GlobalServer(cfg, store, max_batch=3, max_len=96, prefill_chunk=16)
 srv.add_pipeline(params, ["spot-a1", "spot-a2"], weight=2.0)
 srv.add_pipeline(params, ["spot-b1"], weight=1.0)
 
@@ -47,3 +49,8 @@ print(f"all {len(reqs)} requests finished; "
 print(f"tensor store refcounts kept weights resident: "
       f"{[store.refcount(cfg.name, f'full/p{i}') for i in range(2)]}")
 print("events:", [(round(t, 2), k, d) for t, k, d in srv.events])
+for p in srv.pipelines:
+    s = p.engine.stats
+    print(f"p{p.pid} engine: {s.prefills} prefills in "
+          f"{s.prefill_batches} batches + {s.prefill_chunks} chunks, "
+          f"{s.prefill_retraces} prefill traces, {s.tokens_out} tokens")

@@ -1,7 +1,8 @@
 from repro.cluster.simulator import ClusterSim, FTConfig, SimResult
 from repro.cluster.spot_trace import (PAPER_POOLS, AvailabilityTrace,
-                                      generate_trace, select_scenario,
-                                      interruption_events_for_window)
+                                      generate_trace,
+                                      interruption_events_for_window,
+                                      select_scenario)
 from repro.cluster.workload import Request, azure_conversation_like
 
 __all__ = ["ClusterSim", "FTConfig", "SimResult", "PAPER_POOLS",

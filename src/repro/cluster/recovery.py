@@ -54,10 +54,27 @@ def kv_bytes_for_ctx(spec: ModelSpec, ctx: int) -> float:
 
 
 def recompute_seconds(spec: ModelSpec, placement: Placement, ctx: int,
-                      efficiency: float = 1.0) -> float:
-    """Bottleneck-stage prefill over the full context (pipelined view)."""
-    pre, _ = stage_latencies(spec, placement, 1, max(16, ctx), 1)
-    return max(pre) / max(efficiency, 1e-3)
+                      efficiency: float = 1.0, chunk: int = 0,
+                      max_len: int = 0) -> float:
+    """Bottleneck-stage prefill over the full context (pipelined view).
+
+    chunk > 0 models the engine's chunked recompute: the same prefill FLOPs
+    split into chunks interleaved with live decode, so the migrated
+    request's re-admission completes one bottleneck decode step later per
+    extra chunk (live slots, in exchange, never stall for the whole
+    context — the §5.1 interruption-storm head-of-line fix). Mirrors the
+    engine's actual admission rules: only ctx-1 tokens re-prefill (the
+    last generated token is fed to decode, ``Engine._prefill_tokens``),
+    and when max_len > 0 and the padded span ceil(toks/chunk)*chunk would
+    exceed it the engine single-shots (``Engine._use_chunked``)."""
+    pre, dec = stage_latencies(spec, placement, 1, max(16, ctx), 1)
+    total = max(pre)
+    toks = max(ctx - 1, 1)
+    if chunk and 0 < chunk < toks:
+        n_chunks = -(-toks // chunk)
+        if max_len <= 0 or n_chunks * chunk <= max_len:
+            total += (n_chunks - 1) * max(dec)
+    return total / max(efficiency, 1e-3)
 
 
 def transfer_seconds(spec: ModelSpec, placement: Placement, ctx: int
@@ -70,10 +87,14 @@ def transfer_seconds(spec: ModelSpec, placement: Placement, ctx: int
 
 def decide(spec: ModelSpec, placement: Placement, ctx: int,
            remaining_grace_s: float, policy: str = "hybrid",
-           efficiency: float = 1.0) -> RecoveryDecision:
+           efficiency: float = 1.0, chunk: int = 0,
+           max_len: int = 0) -> RecoveryDecision:
     """policy: 'recompute' (paper default), 'transfer', or 'hybrid'
-    (paper §8.1 future work)."""
-    rc = recompute_seconds(spec, placement, ctx, efficiency)
+    (paper §8.1 future work). chunk > 0 prices recompute under the
+    engine's chunked-prefill admission (max_len bounds it as the engine
+    does)."""
+    rc = recompute_seconds(spec, placement, ctx, efficiency, chunk=chunk,
+                           max_len=max_len)
     tr = transfer_seconds(spec, placement, ctx)
     fits = tr <= remaining_grace_s
     if policy == "recompute":

@@ -45,6 +45,9 @@ class FTConfig:
     # 'recompute' (paper §5.1 default) | 'transfer' | 'hybrid' (§8.1 future
     # work, implemented in cluster/recovery.py)
     recovery_policy: str = "recompute"
+    # engine chunked-prefill size for migration recompute (0 = single-shot);
+    # prices re-admission via recovery.recompute_seconds(chunk=...)
+    prefill_chunk: int = 0
 
 
 @dataclasses.dataclass
@@ -231,7 +234,8 @@ class ClusterSim:
                 d = decide(self.spec, pipe.placement,
                            r.req.s_in + r.generated, ft.grace_period_s,
                            policy=self.ft.recovery_policy,
-                           efficiency=self.efficiency)
+                           efficiency=self.efficiency,
+                           chunk=self.ft.prefill_chunk)
                 r.transfer_recovered = (d.mechanism == "transfer")
             r.admit_s = -1.0
             r.migrations += 1

@@ -7,21 +7,20 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-from repro.configs.base import ArchConfig
 from repro.configs import shapes as shapes  # re-export module
-
-from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.base import ArchConfig
 from repro.configs.command_r_plus_104b import CONFIG as _command_r
-from repro.configs.internlm2_1_8b import CONFIG as _internlm2
-from repro.configs.qwen2_0_5b import CONFIG as _qwen2
-from repro.configs.h2o_danube3_4b import CONFIG as _danube
 from repro.configs.granite_moe_3b_a800m import CONFIG as _granite
-from repro.configs.phi35_moe_42b_a6_6b import CONFIG as _phi35
-from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
-from repro.configs.zamba2_2_7b import CONFIG as _zamba2
-from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.h2o_danube3_4b import CONFIG as _danube
+from repro.configs.internlm2_1_8b import CONFIG as _internlm2
 from repro.configs.llama31_70b import CONFIG as _llama70b
+from repro.configs.mamba2_1_3b import CONFIG as _mamba2
+from repro.configs.phi35_moe_42b_a6_6b import CONFIG as _phi35
+from repro.configs.qwen2_0_5b import CONFIG as _qwen2
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
 from repro.configs.qwen3_32b import CONFIG as _qwen3
+from repro.configs.whisper_tiny import CONFIG as _whisper
+from repro.configs.zamba2_2_7b import CONFIG as _zamba2
 
 ASSIGNED: Dict[str, ArchConfig] = {
     "whisper-tiny": _whisper,

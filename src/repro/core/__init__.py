@@ -11,12 +11,12 @@
   * modelspec.py  — analytical architecture description
 """
 
-from repro.core.estimator import Placement, PerfEstimate, Stage, estimate
+from repro.core.cluster_opt import ClusterPlan, populate_cluster
+from repro.core.estimator import PerfEstimate, Placement, Stage, estimate
 from repro.core.eval_engine import FastEstimator, StageTable
 from repro.core.modelspec import LayerSpec, ModelSpec, uniform_decoder
 from repro.core.objective import Objective
 from repro.core.placement import PlacementOptimizer, SearchResult
-from repro.core.cluster_opt import ClusterPlan, populate_cluster
 
 __all__ = [
     "Placement", "PerfEstimate", "Stage", "estimate", "FastEstimator",

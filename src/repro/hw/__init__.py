@@ -1,7 +1,7 @@
+from repro.hw.calibration import CalibrationResult, calibrate
 from repro.hw.profiles import (ALL_INSTANCES, AWS_INSTANCES, TPU_INSTANCES,
                                DeviceProfile, InstanceProfile, effective,
                                get_instance, paper_cluster)
-from repro.hw.calibration import CalibrationResult, calibrate
 
 __all__ = [
     "ALL_INSTANCES", "AWS_INSTANCES", "TPU_INSTANCES", "DeviceProfile",

@@ -17,11 +17,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.models import build_model
 from repro.train import checkpoint as ckpt
 from repro.train.data import DataConfig, SyntheticLM
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import init_train_state, make_train_step
-from repro.models import build_model
 
 
 def main() -> None:

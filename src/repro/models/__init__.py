@@ -1,5 +1,5 @@
 from repro.models.api import build_model, input_specs, make_batch
-from repro.models.transformer import LM
 from repro.models.encdec import EncDecLM
+from repro.models.transformer import LM
 
 __all__ = ["build_model", "input_specs", "make_batch", "LM", "EncDecLM"]

@@ -16,9 +16,9 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.configs.shapes import ShapeSpec
+from repro.models.common import dtype_of
 from repro.models.encdec import EncDecLM
 from repro.models.transformer import LM
-from repro.models.common import dtype_of
 from repro.sharding.rules import Sharder
 
 Model = Union[LM, EncDecLM]

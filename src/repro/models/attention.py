@@ -161,6 +161,30 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     return sdpa(q, cache_k, cache_v, mask)
 
 
+def chunk_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                    q_pos: jax.Array, window: Optional[int] = None
+                    ) -> jax.Array:
+    """Multi-token attention against a linear cache (chunked prefill).
+
+    q: (B,C,nh,d) — a chunk of C new tokens whose K/V are already written
+    into the cache at their absolute positions; q_pos: (B,C) absolute
+    position per query. Query i sees cache slots at positions <= q_pos[i]
+    (and > q_pos[i] - window under SWA). Generalizes ``decode_attention``
+    from C=1 to a whole chunk, which is what bounds head-of-line blocking
+    during migration-recompute storms.
+    """
+    s_alloc = cache_k.shape[1]
+    kpos = jnp.arange(s_alloc)
+    valid = kpos[None, None, :] <= q_pos[:, :, None]        # (B, C, S)
+    if window is not None:
+        valid &= kpos[None, None, :] > (q_pos[:, :, None] - window)
+    mask = valid[:, None, None, :, :]
+    if cache_k.dtype != q.dtype:
+        cache_k = cache_k.astype(q.dtype)
+        cache_v = cache_v.astype(q.dtype)
+    return sdpa(q, cache_k, cache_v, mask)
+
+
 def cache_write_token(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array,
                       v: jax.Array, pos: jax.Array,
                       slot_pos: Optional[jax.Array]):

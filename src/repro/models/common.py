@@ -58,7 +58,6 @@ def _init_array(key, d: ParamDef, dtype) -> jax.Array:
         inv = dt + jnp.log(-jnp.expm1(-dt))
         return inv.astype(dtype)
     if d.init == "mamba_alog":
-        n = d.shape[-1] if d.shape else 1
         a = jnp.linspace(1.0, 16.0, num=int(np.prod(d.shape)) or 1)
         return jnp.log(a).reshape(d.shape).astype(dtype)
     scale = d.scale if d.init == "normal" else d.scale * 0.25

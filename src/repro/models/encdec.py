@@ -207,8 +207,11 @@ class EncDecLM:
         kv = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
         return {"pos": (), "k": kv, "v": kv, "ck": kv, "cv": kv}
 
-    def prefill(self, params, inputs, max_len: Optional[int] = None):
-        """inputs: {"embeds": (B,S_enc,H) frames, "tokens": (B,S_dec)}."""
+    def prefill(self, params, inputs, max_len: Optional[int] = None,
+                last_pos: Optional[jax.Array] = None):
+        """inputs: {"embeds": (B,S_enc,H) frames, "tokens": (B,S_dec)}.
+        last_pos (B,) reads logits at per-row decoder positions (batched
+        right-padded prefill)."""
         tokens = inputs["tokens"]
         b, s = tokens.shape
         max_len = max_len or s
@@ -222,7 +225,11 @@ class EncDecLM:
             cache["v"], v.astype(self.dtype), 0, axis=2)
         cache["ck"], cache["cv"] = kc, vc
         cache["pos"] = jnp.array(s, jnp.int32)
-        logits = self.logits(params, x[:, -1:, :])[:, 0, :]
+        if last_pos is None:
+            last = x[:, -1:, :]
+        else:
+            last = x[jnp.arange(b), last_pos][:, None, :]
+        logits = self.logits(params, last)[:, 0, :]
         return logits, cache
 
     def decode_step(self, params, cache, tokens):

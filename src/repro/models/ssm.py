@@ -184,7 +184,6 @@ def mamba2_step(p: Dict, x: jax.Array, state: SSMState, d_inner: int,
     proj = x @ p["w_in"]                                    # (B,1,P)
     z, xbc, dt = _split_proj(proj, d_inner, n_state, n_heads)
     # conv over [state ; current]
-    k = p["conv_w"].shape[0]
     window = jnp.concatenate([state.conv, xbc], axis=1)     # (B,K,C)
     conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
     conv_out = jax.nn.silu(conv_out)[:, None, :]            # (B,1,C)

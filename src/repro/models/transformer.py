@@ -263,22 +263,53 @@ class LM:
             return x, (k, v, aux)
         return x, aux
 
-    def _dense_layer_decode(self, p: Dict, x, pos, ck, cv, slot_pos):
+    def _mlp_or_moe(self, p: Dict, h: jax.Array) -> jax.Array:
         c = self.cfg
-        h = self.norm(x, p["ln_attn"])
-        a, ck, cv, slot_new = self._attn_decode(p["attn"], h, pos, ck, cv,
-                                                slot_pos)
-        x = x + a
-        h = self.norm(x, p["ln_mlp"])
         if c.n_experts > 0:
             m, _ = moe_mod.moe_apply(
                 p["moe"], h, c.moe_top_k, c.act, c.gated_ffn,
                 capacity_factor=self.moe_capacity_factor,
                 sharder=self.sharder)
-        else:
-            m = ffn_mod.ffn_apply(p["mlp"], h, c.act, c.gated_ffn,
-                                  sharder=self.sharder)
-        return x + m, ck, cv, slot_new
+            return m
+        return ffn_mod.ffn_apply(p["mlp"], h, c.act, c.gated_ffn,
+                                 sharder=self.sharder)
+
+    def _dense_layer_decode(self, p: Dict, x, pos, ck, cv, slot_pos):
+        h = self.norm(x, p["ln_attn"])
+        a, ck, cv, slot_new = self._attn_decode(p["attn"], h, pos, ck, cv,
+                                                slot_pos)
+        x = x + a
+        h = self.norm(x, p["ln_mlp"])
+        return x + self._mlp_or_moe(p, h), ck, cv, slot_new
+
+    def _dense_layer_chunk(self, p: Dict, x, q_pos, ck, cv, base):
+        """Chunked-prefill layer body: C new tokens against a linear cache.
+
+        Writes the chunk's K/V at [base, base+C) and attends every query
+        against the whole cache under per-query position masking — the
+        C-token generalization of ``_dense_layer_decode``.
+        """
+        c = self.cfg
+        h = self.norm(x, p["ln_attn"])
+        positions = q_pos
+        if c.m_rope:
+            positions = jnp.broadcast_to(q_pos[None], (3,) + q_pos.shape)
+        q, k, v = self._qkv(p["attn"], h, positions)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.astype(ck.dtype), base, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.astype(cv.dtype), base, axis=1)
+        # intentionally jnp even under use_pallas: no chunk kernel with a
+        # KV-history operand exists yet (ROADMAP "Pallas prefill-chunk
+        # kernel"); prefill/decode still route to the kernels
+        o = attn.chunk_attention(q, ck, cv, q_pos, window=c.swa_window)
+        o = o.reshape(x.shape[0], x.shape[1], c.n_heads * c.hd) @ p["attn"]["wo"]
+        if "bo" in p["attn"]:
+            o = o + p["attn"]["bo"]
+        x = x + self.sharder.constrain(o, "batch", "seq", None)
+        h = self.norm(x, p["ln_mlp"])
+        x = x + self._mlp_or_moe(p, h)
+        return self.sharder.constrain(x, "batch", "seq", None), ck, cv
 
     def _mamba_layer_fwd(self, p: Dict, x: jax.Array):
         c = self.cfg
@@ -480,12 +511,17 @@ class LM:
         return specs
 
     def prefill(self, params: Dict, inputs: Dict,
-                max_len: Optional[int] = None, ring: bool = True
+                max_len: Optional[int] = None, ring: bool = True,
+                last_pos: Optional[jax.Array] = None
                 ) -> Tuple[jax.Array, Dict]:
         """Prompt -> (last-position logits (B, Vpad), filled cache).
 
         The returned cache is allocated at ``max_len`` (>= prompt length).
         ring=False gives SWA archs a linear full-length cache (engine mode).
+        last_pos (B,) reads logits at a per-row position instead of the
+        final one — the right-padded batched-prefill case, where row i's
+        real prompt ends at last_pos[i] (causality keeps pad columns from
+        leaking into real rows).
         """
         c = self.cfg
         x = self.embed(params, inputs)
@@ -498,7 +534,10 @@ class LM:
                 positions = jnp.broadcast_to(positions[None], (3, b, s))
         x, aux = self._run_trunk_full(params, x, positions, collect_kv=True)
         x = self.norm(x, params["final_norm"])
-        last = x[:, -1:, :]
+        if last_pos is None:
+            last = x[:, -1:, :]
+        else:
+            last = x[jnp.arange(b), last_pos][:, None, :]
         logits = self.logits(params, last)[:, 0, :]
         cache = self.init_cache(b, max_len, ring=ring)
         cache["pos"] = jnp.array(s, jnp.int32)
@@ -520,6 +559,48 @@ class LM:
             if slot is not None:
                 cache["slot_pos"] = slot_new
         return logits, cache
+
+    def prefill_chunk(self, params: Dict, cache: Dict, tokens: jax.Array,
+                      base: jax.Array,
+                      last_pos: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, Dict]:
+        """Incremental prefill: extend a *linear* cache with a C-token chunk
+        starting at absolute position ``base``.
+
+        tokens: (B, C) int32; base: scalar int32. Chunk K/V land at cache
+        positions [base, base+C); queries attend the whole prefix under
+        per-position masks, so running this over consecutive chunks is
+        mathematically identical to one full prefill — that is what lets
+        migration recompute interleave with live decode without a
+        head-of-line stall. Attention families only (SSM state would need
+        carried recurrence). Returns (logits at ``last_pos`` (default: last
+        chunk column), updated cache).
+        """
+        c = self.cfg
+        assert c.family not in ("ssm", "hybrid"), \
+            "chunked prefill requires attention caches"
+        assert "slot_pos" not in cache, "chunked prefill needs a linear cache"
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        b, cl = tokens.shape
+        q_pos = base + jnp.broadcast_to(jnp.arange(cl)[None], (b, cl))
+
+        def body(h, xs):
+            p_l, ck, cv = xs
+            h, ck, cv = self._dense_layer_chunk(p_l, h, q_pos, ck, cv, base)
+            return h, (ck, cv)
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ck, cv
+        new_cache["pos"] = jnp.broadcast_to(base + cl, cache["pos"].shape
+                                            ).astype(jnp.int32)
+        x = self.norm(x, params["final_norm"])
+        if last_pos is None:
+            last = x[:, -1:, :]
+        else:
+            last = x[jnp.arange(b), last_pos][:, None, :]
+        logits = self.logits(params, last)[:, 0, :]
+        return logits, new_cache
 
     def decode_step(self, params: Dict, cache: Dict, tokens: jax.Array
                     ) -> Tuple[jax.Array, Dict]:

@@ -1,20 +1,45 @@
-"""Real JAX inference engine with continuous batching.
+"""Shape-stable batched continuous-batching engine (execution plane v2).
 
-Slot-based continuous batching: a fixed (max_batch, max_len) KV/state cache;
-each slot holds one request at its own position (the decode path supports
-per-sequence position vectors). Admission prefills a request and scatters
-its cache rows into a free slot; every ``step()`` decodes one token for all
-live slots; finished slots free immediately.
+Slot-based continuous batching over a fixed (max_batch, max_len) KV/state
+cache, rebuilt for admission throughput and trace stability:
 
-This is the execution-plane engine — it actually generates tokens (small
-models on CPU in tests/examples; the same code path jit-lowers for the
-production meshes via launch.steps).
+* **Batched, bucketed prefill** — waiting requests are admitted in groups
+  of ``prefill_group``, right-padded to a power-of-2 length bucket, so the
+  jit'd prefill traces O(log max_len) shapes instead of one per prompt
+  length (``EngineStats.prefill_retraces`` proves the bound). Causal
+  masking makes right-padding exact for dense-attention families;
+  SSM/hybrid trunks carry recurrent state through pad tokens and MoE
+  expert capacity is shared across the flattened token stream, so those
+  admit at exact length (and MoE at batch 1) to stay output-exact.
+* **Chunked prefill** — contexts longer than ``prefill_chunk`` (the
+  migration-recompute case: context = prompt + preserved output) prefill
+  chunk-by-chunk between decode steps, bounding head-of-line blocking for
+  live slots during interruption storms.
+* **Fused jit'd slot scatter** — one jit'd gather/scatter installs a whole
+  prefill group into its slots (cache donated via ``donate_argnums``),
+  replacing the per-cache-key Python ``at[].set`` loop.
+* **Masked, donated decode** — dead slots are masked (their cache position
+  is frozen) instead of decoding token 0 forever; the cache buffer is
+  donated across steps.
+
+Migration semantics fix over the seed engine: re-admission prefills
+``prompt + generated[:-1]`` and lets the first decode step feed
+``generated[-1]``, reproducing the uninterrupted run's cache layout
+byte-for-byte (the seed prefilled the full context and then fed the last
+token again, duplicating it at two positions). With greedy sampling an
+interrupted run now emits identical tokens to an uninterrupted one
+(paper §5.1, tested end-to-end in tests/test_engine_v2.py).
+
+``admission="legacy"`` keeps the seed's per-request batch-1 eager path
+(with the semantics fix) as the baseline for
+benchmarks/bench_engine_throughput.py.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,23 +49,71 @@ from repro.configs.base import ArchConfig
 from repro.models import build_model
 from repro.serving.request import ServeRequest
 
+_donation_filter_installed = False
+
+
+def _silence_cpu_donation_warnings() -> None:
+    """CPU has no buffer donation EVER, so the per-compile warning carries
+    no signal there — silence it once so driver/example logs stay readable.
+    On TPU/GPU the warning stays live: a missed donation is a real
+    regression on accelerators."""
+    global _donation_filter_installed
+    if _donation_filter_installed or jax.default_backend() != "cpu":
+        return
+    _donation_filter_installed = True
+    warnings.filterwarnings(
+        "ignore", message="Some donated buffers were not")
+
 
 @dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0
+    prefills: int = 0           # requests prefilled (admissions)
+    prefill_batches: int = 0    # batched prefill dispatches
+    prefill_chunks: int = 0     # chunked-prefill chunk dispatches
     decode_steps: int = 0
     tokens_out: int = 0
+    retraces: int = 0           # total jit traces (prefill+decode+scatter)
+    prefill_retraces: int = 0   # prefill traces — bounded by bucket count
+
+
+@dataclasses.dataclass
+class _Pending:
+    """A long-context admission being prefilled chunk-by-chunk."""
+    req: ServeRequest
+    slot: int
+    tokens: np.ndarray
+    base: int = 0
+    cache: Any = None
 
 
 class Engine:
     def __init__(self, cfg: ArchConfig, params: Any, max_batch: int = 8,
                  max_len: int = 256, model_kw: Optional[Dict] = None,
-                 np_rng: Optional[np.random.RandomState] = None):
+                 np_rng: Optional[np.random.RandomState] = None,
+                 use_pallas: bool = False, prefill_group: int = 4,
+                 prefill_bucket: int = 16, prefill_chunk: int = 0,
+                 admission: str = "bucketed"):
+        assert admission in ("bucketed", "legacy"), admission
+        _silence_cpu_donation_warnings()
         self.cfg = cfg
-        self.model = build_model(cfg, **(model_kw or {}))
+        model_kw = dict(model_kw or {})
+        model_kw.setdefault("use_pallas", use_pallas)
+        self.use_pallas = model_kw["use_pallas"]
+        self.model = build_model(cfg, **model_kw)
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
+        self.admission = admission
+        self.prefill_chunk = int(prefill_chunk)
+        # MoE expert capacity is computed over the flattened (batch, seq)
+        # token stream, so pad tokens/rows would compete with real tokens
+        # for expert slots and change which tokens get dropped — batched or
+        # padded prefill is not output-exact for MoE. Admit batch-1 at
+        # exact length until the router masks pads (ROADMAP follow-up).
+        self._moe = cfg.n_experts > 0
+        self._group = 1 if self._moe else max(1, min(prefill_group,
+                                                     max_batch))
+        self._min_bucket = max(1, min(prefill_bucket, max_len))
         self.enc_frames = 8           # stubbed frontend frame count
         if cfg.is_encdec:
             self.cache = self.model.init_cache(max_batch, max_len,
@@ -51,17 +124,220 @@ class Engine:
                                                ring=False, vector_pos=True)
         self.slots: List[Optional[ServeRequest]] = [None] * max_batch
         self.stats = EngineStats()
-        self._decode = jax.jit(self.model.decode_step)
+        self._pending: List[_Pending] = []
+        self._admit_finished: List[ServeRequest] = []
+        self._legacy_shapes: set = set()
 
-    # -- slot management ------------------------------------------------------
+        def prefill_fn(params, tokens, last_pos):
+            self.stats.retraces += 1
+            self.stats.prefill_retraces += 1
+            if cfg.is_encdec:
+                frames = jnp.zeros(
+                    (tokens.shape[0], self.enc_frames, cfg.d_model),
+                    jnp.float32)
+                return self.model.prefill(
+                    params, {"embeds": frames, "tokens": tokens},
+                    max_len=self.max_len, last_pos=last_pos)
+            return self.model.prefill(params, {"tokens": tokens},
+                                      max_len=self.max_len, ring=False,
+                                      last_pos=last_pos)
+
+        def chunk_fn(params, cache, tokens, base, last_pos):
+            self.stats.retraces += 1
+            self.stats.prefill_retraces += 1
+            return self.model.prefill_chunk(params, cache, tokens, base,
+                                            last_pos=last_pos)
+
+        def scatter_fn(cache, group, slots, rows, lens):
+            # Install ``group`` (batch G, possibly with pad rows remapped to
+            # row 0 / slot[0] so duplicate writes agree) into slot rows.
+            self.stats.retraces += 1
+            out = dict(cache)
+            for key, small in group.items():
+                if key == "pos":
+                    out["pos"] = cache["pos"].at[slots].set(lens)
+                elif key == "slot_pos":
+                    continue              # engine caches are linear
+                else:
+                    sel = jnp.take(small, rows, axis=1)
+                    out[key] = cache[key].at[:, slots].set(
+                        sel.astype(cache[key].dtype))
+            return out
+
+        def decode_fn(params, cache, tokens, live):
+            self.stats.retraces += 1
+            logits, new_cache = self.model.decode_step(params, cache, tokens)
+            # dead slots: freeze the cache position instead of advancing on
+            # a dummy token (their rows are fully overwritten on reuse)
+            new_cache["pos"] = jnp.where(live, new_cache["pos"],
+                                         cache["pos"])
+            return logits, new_cache
+
+        self._prefill_b = jax.jit(prefill_fn)
+        self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
+        self._scatter = jax.jit(scatter_fn, donate_argnums=(0, 1))
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    # -- buckets ----------------------------------------------------------------
+    def bucket_lens(self) -> List[int]:
+        """Prefill length buckets: powers of two up to max_len."""
+        out, b = [], self._min_bucket
+        while b < self.max_len:
+            out.append(b)
+            b *= 2
+        out.append(self.max_len)
+        return out
+
+    def _bucket(self, n: int) -> int:
+        if self.cfg.family in ("ssm", "hybrid") or self._moe:
+            return n      # recurrent state / expert capacity: no padding
+        b = self._min_bucket
+        while b < n:
+            b *= 2
+        return min(b, self.max_len)
+
+    def _use_chunked(self, n: int) -> bool:
+        # MoE excluded: per-chunk expert capacity differs from full-prefill
+        # capacity, changing token drops (same exactness issue as padding)
+        if (self.prefill_chunk <= 0 or self.cfg.is_encdec
+                or self.cfg.family in ("ssm", "hybrid") or self._moe):
+            return False
+        n_chunks = -(-n // self.prefill_chunk)
+        return n > self.prefill_chunk and \
+            n_chunks * self.prefill_chunk <= self.max_len
+
+    @staticmethod
+    def _prefill_tokens(req: ServeRequest) -> List[int]:
+        """Context to prefill: the full context *minus* the last generated
+        token, which the first decode step feeds — so a recomputed cache is
+        laid out identically to an uninterrupted run's."""
+        ctx = req.full_context()
+        return ctx[:-1] if req.generated else ctx
+
+    # -- slot management --------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
 
     def active(self) -> List[ServeRequest]:
         return [s for s in self.slots if s is not None]
 
-    def _scatter_cache(self, slot: int, one: Dict) -> None:
-        """Write a single-request cache (batch dim 1) into slot ``slot``."""
+    def _pending_slots(self) -> set:
+        return {p.slot for p in self._pending}
+
+    # -- admission --------------------------------------------------------------
+    def admit(self, req: ServeRequest) -> bool:
+        return bool(self.admit_many([req]))
+
+    def admit_many(self, reqs: Sequence[ServeRequest]
+                   ) -> List[ServeRequest]:
+        """Admit a prefix of ``reqs`` bounded by free slots.
+
+        Requests are grouped by length bucket and prefilled in batches of
+        ``prefill_group``; long contexts go to the chunked path. Returns
+        the admitted requests (finished ones surface via ``step()``)."""
+        free = self.free_slots()
+        take: List[ServeRequest] = []
+        slots_needed = 0
+        for r in reqs:               # strict prefix; done reqs need no slot
+            if not r.done:
+                if slots_needed >= len(free):
+                    break
+                slots_needed += 1
+            take.append(r)
+        if not take:
+            return []
+        free_iter = iter(free)
+        admitted: List[ServeRequest] = []
+        groups: Dict[int, List[Tuple[ServeRequest, List[int], int]]] = {}
+        for r in take:
+            if r.done:                # nothing to generate: pass through
+                self._admit_finished.append(r)
+                admitted.append(r)
+                continue
+            assert r.ctx_len + r.max_new_tokens - len(r.generated) \
+                <= self.max_len, "context exceeds engine max_len"
+            toks = self._prefill_tokens(r)
+            slot = next(free_iter)
+            if self.admission == "legacy":
+                self._admit_one_legacy(r, toks, slot)
+            elif self._use_chunked(len(toks)):
+                self.slots[slot] = r
+                self._pending.append(
+                    _Pending(r, slot, np.asarray(toks, np.int32)))
+            else:
+                groups.setdefault(self._bucket(len(toks)), []).append(
+                    (r, toks, slot))
+            admitted.append(r)
+        for blen, items in sorted(groups.items()):
+            for i in range(0, len(items), self._group):
+                self._admit_group(items[i:i + self._group], blen)
+        return admitted
+
+    def _admit_group(self, items, blen: int) -> None:
+        """One batched prefill + fused scatter for <= prefill_group
+        requests sharing a length bucket."""
+        g, n = self._group, len(items)
+        tokens = np.zeros((g, blen), np.int32)
+        lens = np.zeros((g,), np.int32)
+        slots = np.zeros((g,), np.int32)
+        rows = np.zeros((g,), np.int32)
+        for j, (r, toks, slot) in enumerate(items):
+            tokens[j, :len(toks)] = toks
+            lens[j] = len(toks)
+            slots[j] = slot
+            rows[j] = j
+        # pad rows replicate row 0: duplicate slot writes carry identical
+        # data, keeping the scatter deterministic
+        lens[n:] = lens[0]
+        slots[n:] = slots[0]
+        logits, group_cache = self._prefill_b(
+            self.params, jnp.asarray(tokens), jnp.asarray(lens - 1))
+        self.cache = self._scatter(self.cache, group_cache,
+                                   jnp.asarray(slots), jnp.asarray(rows),
+                                   jnp.asarray(lens))
+        first = np.asarray(self.model.sample_greedy(logits))
+        self.stats.prefill_batches += 1
+        for j, (r, toks, slot) in enumerate(items):
+            self._install(r, slot, first[j])
+
+    def _install(self, req: ServeRequest, slot: int, first_tok) -> None:
+        """Post-prefill bookkeeping shared by all admission paths."""
+        self.slots[slot] = req
+        self.stats.prefills += 1
+        if not req.generated:        # fresh request: prefill emits 1st token
+            req.generated.append(int(first_tok))
+            self.stats.tokens_out += 1
+        if req.done:
+            self.slots[slot] = None
+            self._admit_finished.append(req)
+
+    def _admit_one_legacy(self, req: ServeRequest, toks: List[int],
+                          slot: int) -> None:
+        """Seed admission path: eager batch-1 exact-length prefill plus a
+        per-key Python scatter loop (one trace per distinct length)."""
+        if len(toks) not in self._legacy_shapes:
+            self._legacy_shapes.add(len(toks))
+            self.stats.retraces += 1
+            self.stats.prefill_retraces += 1
+        tokens = jnp.asarray([toks], jnp.int32)
+        if self.cfg.is_encdec:
+            frames = jnp.zeros((1, self.enc_frames, self.cfg.d_model),
+                               jnp.float32)
+            logits, one = self.model.prefill(
+                self.params, {"embeds": frames, "tokens": tokens},
+                max_len=self.max_len)
+        else:
+            logits, one = self.model.prefill(self.params,
+                                             {"tokens": tokens},
+                                             max_len=self.max_len,
+                                             ring=False)
+        self._scatter_cache_legacy(slot, one, len(toks))
+        self.stats.prefill_batches += 1
+        self._install(req, slot, self.model.sample_greedy(logits)[0])
+
+    def _scatter_cache_legacy(self, slot: int, one: Dict,
+                              ctx_len: int) -> None:
+        """Write a single-request cache (batch dim 1) into ``slot``."""
         def scatter(big, small, batch_axis):
             idx = [slice(None)] * big.ndim
             idx[batch_axis] = slice(slot, slot + 1)
@@ -73,59 +349,65 @@ class Engine:
 
         for key, small in one.items():
             if key == "pos":
-                self.cache["pos"] = self.cache["pos"].at[slot].set(small)
+                self.cache["pos"] = self.cache["pos"].at[slot].set(ctx_len)
             elif key == "slot_pos":
                 continue                      # engine caches are linear
             else:
-                axis = 1                      # (L, B, ...) stacked caches
-                self.cache[key] = scatter(self.cache[key], small, axis)
+                self.cache[key] = scatter(self.cache[key], small, 1)
 
-    # -- admission --------------------------------------------------------------
-    def admit(self, req: ServeRequest) -> bool:
-        """Prefill ``req``'s full context (prompt + generated — that is what
-        makes migration output-preserving) into a free slot."""
-        free = self.free_slots()
-        if not free:
-            return False
-        slot = free[0]
-        ctx = req.full_context()
-        assert len(ctx) + req.max_new_tokens - len(req.generated) \
-            <= self.max_len, "context exceeds engine max_len"
-        tokens = jnp.asarray([ctx], jnp.int32)
-        if self.cfg.is_encdec:
-            # frontend is a stub: deterministic zero frames (the decoder
-            # token stream is what migration must preserve)
-            frames = jnp.zeros((1, self.enc_frames, self.cfg.d_model),
-                               jnp.float32)
-            logits, one = self.model.prefill(
-                self.params, {"embeds": frames, "tokens": tokens},
-                max_len=self.max_len)
-        else:
-            logits, one = self.model.prefill(self.params, {"tokens": tokens},
-                                             max_len=self.max_len,
-                                             ring=False)
-        self._scatter_cache(slot, one)
-        self.slots[slot] = req
-        self.stats.prefills += 1
-        if not req.generated:        # fresh request: prefill emits 1st token
-            tok = int(self.model.sample_greedy(logits)[0])
-            req.generated.append(tok)
-            self.stats.tokens_out += 1
-        return True
+    # -- chunked prefill --------------------------------------------------------
+    def _advance_pending(self) -> None:
+        """One chunk of prefill work per pending admission, interleaved
+        between decode steps (bounds head-of-line blocking)."""
+        c = self.prefill_chunk
+        still: List[_Pending] = []
+        for p in self._pending:
+            if p.cache is None:
+                p.cache = self.model.init_cache(1, self.max_len, ring=False)
+            end = min(p.base + c, len(p.tokens))
+            chunk = np.zeros((1, c), np.int32)
+            chunk[0, :end - p.base] = p.tokens[p.base:end]
+            last_idx = min(c - 1, len(p.tokens) - 1 - p.base)
+            logits, p.cache = self._chunk(
+                self.params, p.cache, jnp.asarray(chunk),
+                jnp.asarray(p.base, jnp.int32),
+                jnp.asarray([last_idx], jnp.int32))
+            self.stats.prefill_chunks += 1
+            p.base = end
+            if p.base >= len(p.tokens):
+                lens = jnp.asarray([len(p.tokens)], jnp.int32)
+                self.cache = self._scatter(
+                    self.cache, p.cache, jnp.asarray([p.slot], jnp.int32),
+                    jnp.zeros((1,), jnp.int32), lens)
+                self.slots[p.slot] = None     # _install re-marks the slot
+                self._install(p.req, p.slot,
+                              self.model.sample_greedy(logits)[0])
+            else:
+                still.append(p)
+        self._pending = still
 
     # -- decode -----------------------------------------------------------------
     def step(self) -> List[ServeRequest]:
-        """One decode iteration for all live slots; returns finished."""
-        live = [i for i, s in enumerate(self.slots) if s is not None]
+        """One scheduling iteration: advance chunked prefills, then decode
+        one token for every live slot; returns finished requests."""
+        if self._pending:
+            self._advance_pending()
+        finished = list(self._admit_finished)
+        self._admit_finished.clear()
+        pending = self._pending_slots()
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and i not in pending]
         if not live:
-            return []
-        tokens = jnp.asarray(
-            [[self.slots[i].generated[-1] if (self.slots[i] is not None
-                                              and self.slots[i].generated)
-              else 0] for i in range(self.max_batch)], jnp.int32)
-        logits, self.cache = self._decode(self.params, self.cache, tokens)
+            return finished
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        mask = np.zeros((self.max_batch,), bool)
+        for i in live:
+            tokens[i, 0] = self.slots[i].generated[-1]
+            mask[i] = True
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(tokens),
+                                          jnp.asarray(mask))
         nxt = np.asarray(self.model.sample_greedy(logits))[:, 0]
-        finished = []
         for i in live:
             req = self.slots[i]
             req.generated.append(int(nxt[i]))
@@ -139,7 +421,7 @@ class Engine:
     def drain(self) -> List[ServeRequest]:
         """Run until every admitted request finishes."""
         out = []
-        while self.active():
+        while self.active() or self._pending or self._admit_finished:
             out.extend(self.step())
         return out
 
@@ -147,5 +429,8 @@ class Engine:
         """Simulated engine death: return in-flight requests (their
         ``generated`` lists are the preserved output — paper §5.1)."""
         reqs = [s for s in self.slots if s is not None]
+        reqs += [r for r in self._admit_finished if r not in reqs]
         self.slots = [None] * self.max_batch
+        self._pending = []
+        self._admit_finished = []
         return reqs

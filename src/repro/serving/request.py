@@ -24,6 +24,11 @@ class ServeRequest:
     finish_s: float = -1.0
 
     @property
+    def ctx_len(self) -> int:
+        """Current context length (prompt + generated so far)."""
+        return len(self.prompt) + len(self.generated)
+
+    @property
     def done(self) -> bool:
         if len(self.generated) >= self.max_new_tokens:
             return True

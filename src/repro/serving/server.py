@@ -4,9 +4,17 @@
 A ``ServingPipeline`` binds an ``Engine`` to a set of instance ids (from a
 placement). The ``GlobalServer``:
 
-  * dispatches requests weighted-round-robin by pipeline throughput (§3);
+  * dispatches requests weighted-round-robin by pipeline throughput (§3),
+    with weights derived from ``core.estimator`` stage latencies when the
+    pipeline's ``Placement`` is known (instead of a hardcoded 1.0);
+  * advances the virtual clock by the estimator's bottleneck decode-step
+    latency per scheduling round (``tick``), so reported throughput is
+    consistent with the simulator instead of a hardcoded 0.01 s/round;
   * on a spot interruption: collects in-flight requests WITH their generated
-    outputs (output-preserving request migration, §5.1) and re-queues them;
+    outputs (output-preserving request migration, §5.1) and re-queues them —
+    onto surviving pipelines, or back onto the interrupted pipeline's own
+    queue when none survive (it revives at ``down_until``; requests must
+    never be silently dropped);
   * rebuilds the pipeline with a replacement instance: with the shared
     tensor store the new engine ATTACHES to resident weights (concurrent
     initialization, §5.2) — the rebuild overlaps serving on the other
@@ -27,6 +35,8 @@ from repro.serving.engine import Engine
 from repro.serving.request import ServeRequest
 from repro.serving.tensor_store import TensorStore
 
+DEFAULT_ROUND_S = 0.01           # fallback when no placement is known
+
 
 @dataclasses.dataclass
 class FTTimes:
@@ -45,13 +55,18 @@ class ServingPipeline:
     alive: bool = True
     down_until: float = 0.0
     queue: List[ServeRequest] = dataclasses.field(default_factory=list)
+    placement: Optional[Any] = None       # core.estimator.Placement
+    round_s: float = DEFAULT_ROUND_S      # est. decode-step wall time
 
 
 class GlobalServer:
     def __init__(self, cfg: ArchConfig, store: Optional[TensorStore],
                  ft: Optional[FTTimes] = None, use_migration: bool = True,
                  use_concurrent_init: bool = True, max_batch: int = 4,
-                 max_len: int = 128):
+                 max_len: int = 128, use_pallas: bool = False,
+                 prefill_chunk: int = 0,
+                 est_workload: Tuple[int, int] = (763, 232),
+                 engine_kw: Optional[Dict] = None):
         self.cfg = cfg
         self.store = store
         self.ft = ft or FTTimes()
@@ -59,6 +74,10 @@ class GlobalServer:
         self.use_concurrent_init = use_concurrent_init
         self.max_batch = max_batch
         self.max_len = max_len
+        self.est_workload = est_workload      # (s_in, s_out) for estimates
+        self.engine_kw = dict(engine_kw or {})
+        self.engine_kw.setdefault("use_pallas", use_pallas)
+        self.engine_kw.setdefault("prefill_chunk", prefill_chunk)
         self.pipelines: List[ServingPipeline] = []
         self.clock = 0.0
         self._rr_credit: Dict[int, float] = {}
@@ -66,18 +85,42 @@ class GlobalServer:
         self.events: List[Tuple[float, str, str]] = []   # (t, kind, detail)
 
     # -- pipeline lifecycle ---------------------------------------------------
+    def _build_engine(self, params: Any) -> Engine:
+        return Engine(self.cfg, params, max_batch=self.max_batch,
+                      max_len=self.max_len, **self.engine_kw)
+
+    def _estimate_pipeline(self, placement) -> Tuple[float, float]:
+        """(dispatch weight, per-round seconds) from the §4.1 estimator's
+        stage latencies for this placement at the reference workload."""
+        from repro.core import estimator
+        s_in, s_out = self.est_workload
+        est = estimator.estimate(placement.spec, placement, s_in, s_out)
+        if est.batch <= 0 or not est.decode_stage_s:
+            return 1.0, DEFAULT_ROUND_S
+        # one scheduling round == one decode step on every live slot; the
+        # bottleneck stage paces the pipeline (Eq. 5)
+        round_s = max(est.decode_stage_s) / s_out
+        return max(est.throughput_rps, 1e-9), max(round_s, 1e-6)
+
     def add_pipeline(self, params: Any, instance_ids: Sequence[str],
-                     weight: float = 1.0, partition: str = "full"
-                     ) -> ServingPipeline:
+                     weight: Optional[float] = None, partition: str = "full",
+                     placement=None) -> ServingPipeline:
         if self.store is not None:
-            self.store.put(self.cfg.name, f"{partition}/p{len(self.pipelines)}",
-                           params)
-            params = self.store.attach(
-                self.cfg.name, f"{partition}/p{len(self.pipelines)}")
-        eng = Engine(self.cfg, params, max_batch=self.max_batch,
-                     max_len=self.max_len)
-        p = ServingPipeline(len(self.pipelines), eng, list(instance_ids),
-                            weight)
+            key = f"{partition}/p{len(self.pipelines)}"
+            params, cold = self.store.put_or_attach(self.cfg.name, key,
+                                                    params)
+            if cold:
+                self.events.append((self.clock, "store_load",
+                                    f"{self.cfg.name}/{key}"))
+        round_s = DEFAULT_ROUND_S
+        if placement is not None:
+            est_w, round_s = self._estimate_pipeline(placement)
+            if weight is None:
+                weight = est_w
+        p = ServingPipeline(len(self.pipelines), self._build_engine(params),
+                            list(instance_ids),
+                            1.0 if weight is None else weight,
+                            placement=placement, round_s=round_s)
         self.pipelines.append(p)
         self._rr_credit[p.pid] = 0.0
         return p
@@ -96,8 +139,8 @@ class GlobalServer:
 
     # -- serving loop -------------------------------------------------------------
     def step(self) -> int:
-        """One scheduling round: admit queued requests, one decode step per
-        alive pipeline. Returns tokens emitted."""
+        """One scheduling round: batched admission of queued requests, one
+        decode step per alive pipeline. Returns tokens emitted."""
         emitted = 0
         for p in self.pipelines:
             if not p.alive:
@@ -106,27 +149,50 @@ class GlobalServer:
                     self.events.append((self.clock, "revive", f"p{p.pid}"))
                 else:
                     continue
-            while p.queue and p.engine.free_slots():
-                req = p.queue.pop(0)
-                p.engine.admit(req)
-                if req.first_token_s < 0 and req.generated:
-                    req.first_token_s = self.clock
+            toks_before = p.engine.stats.tokens_out
+            admitted = p.engine.admit_many(p.queue)
+            del p.queue[:len(admitted)]
             fin = p.engine.step()
-            emitted += len([s for s in p.engine.slots if s]) + len(fin)
+            for r in list(p.engine.active()) + fin:
+                if r.first_token_s < 0 and r.generated:
+                    r.first_token_s = self.clock
+            emitted += p.engine.stats.tokens_out - toks_before
             for r in fin:
                 r.finish_s = self.clock
                 self.completed.append(r)
         return emitted
 
+    def round_s(self) -> float:
+        """Virtual seconds one scheduling round represents: the slowest
+        alive pipeline's estimated decode-step latency."""
+        alive = [p.round_s for p in self.pipelines if p.alive]
+        return max(alive) if alive else DEFAULT_ROUND_S
+
+    def tick(self) -> None:
+        if any(p.alive for p in self.pipelines):
+            self.clock += self.round_s()
+            return
+        # nothing is serving: fast-forward the virtual clock to the next
+        # revival so queued work (e.g. requests requeued on a sole
+        # interrupted pipeline) is never starved by a round budget that
+        # cannot span the grace period
+        waking = [p.down_until for p in self.pipelines
+                  if p.down_until > self.clock]
+        if waking:
+            self.clock = min(waking)
+        else:
+            self.clock += DEFAULT_ROUND_S
+
+    def pending(self) -> bool:
+        return any(p.queue or p.engine.active() for p in self.pipelines)
+
     def run_until_drained(self, max_rounds: int = 10_000) -> None:
         rounds = 0
         while rounds < max_rounds:
-            pending = any(p.queue or p.engine.active()
-                          for p in self.pipelines)
-            if not pending:
+            if not self.pending():
                 break
             self.step()
-            self.clock += 0.01
+            self.tick()
             rounds += 1
 
     # -- fault tolerance ------------------------------------------------------------
@@ -135,7 +201,7 @@ class GlobalServer:
         torn down after the grace period; in-flight requests migrate
         (output-preserving) or restart. Returns the affected requests."""
         ft = self.ft
-        affected: List[ServeRequest] = []
+        affected: List[Tuple[ServeRequest, ServingPipeline]] = []
         for p in self.pipelines:
             if not p.alive or instance_id not in p.instance_ids:
                 continue
@@ -160,19 +226,20 @@ class GlobalServer:
                 if not self.use_migration:
                     r.generated = []          # progress lost
                 r.migrations += 1
-                affected.append(r)
+                affected.append((r, p))
             p.alive = False
             p.instance_ids = [i for i in p.instance_ids if i != instance_id]
             p.instance_ids.append(f"{instance_id}/replacement")
             # rebuild engine NOW (attach-only when store present) so tokens
             # keep flowing the moment down_until passes
-            params = p.engine.params
-            p.engine = Engine(self.cfg, params, max_batch=self.max_batch,
-                              max_len=self.max_len)
-        # re-dispatch affected requests to surviving pipelines
-        for r in affected:
-            self.submit(r)
-        return affected
+            p.engine = self._build_engine(p.engine.params)
+        # re-dispatch affected requests to surviving pipelines; if none is
+        # alive, requeue on the owner — it revives at down_until, and a
+        # request must never be dropped because submit() had no target
+        for r, owner in affected:
+            if self.submit(r) is None:
+                owner.queue.append(r)
+        return [r for r, _ in affected]
 
     def downtime_of(self, pid: int) -> float:
         p = self.pipelines[pid]

@@ -52,6 +52,22 @@ class TensorStore:
         self._refcount[key] = self._refcount.get(key, 0) + 1
         return self._store[key]
 
+    def put_or_attach(self, model: str, partition: str,
+                      params: Any) -> Tuple[Any, bool]:
+        """Idempotent publish: the first caller stores the partition (cold);
+        every later caller attaches to the resident arrays. Returns
+        (params, cold) — the concurrent-initialization fast path, §5.2."""
+        key = (model, partition)
+        cold = key not in self._store
+        if cold:
+            self._store[key] = params
+        self._refcount[key] = self._refcount.get(key, 0) + 1
+        return self._store[key], cold
+
+    def resident_bytes(self) -> int:
+        """Total bytes pinned by the store (capacity-planning metric)."""
+        return sum(_tree_bytes(v) for v in self._store.values())
+
     def detach(self, model: str, partition: str) -> None:
         key = (model, partition)
         if key in self._refcount and self._refcount[key] > 0:

@@ -1,9 +1,10 @@
-from repro.train.optimizer import AdamWConfig, AdamWState, adamw_update, init_adamw
+from repro.train import checkpoint, elastic
+from repro.train.data import DataConfig, SyntheticLM
+from repro.train.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                   init_adamw)
 from repro.train.train_step import (TrainState, choose_microbatches,
                                     init_train_state, make_train_step,
                                     train_state_specs)
-from repro.train.data import DataConfig, SyntheticLM
-from repro.train import checkpoint, elastic
 
 __all__ = ["AdamWConfig", "AdamWState", "adamw_update", "init_adamw",
            "TrainState", "choose_microbatches", "init_train_state",

@@ -5,11 +5,11 @@ import math
 import pytest
 
 from repro.core import comm
+from repro.core.cluster_opt import populate_cluster
 from repro.core.modelspec import uniform_decoder
 from repro.core.objective import Objective
 from repro.core.placement import (PlacementOptimizer, exhaustive_search,
                                   stage_options_for)
-from repro.core.cluster_opt import populate_cluster
 from repro.hw.profiles import AWS_INSTANCES
 
 

@@ -5,8 +5,8 @@ import math
 import pytest
 
 from repro.core import estimator, roofline
-from repro.core.modelspec import LayerSpec, uniform_decoder
 from repro.core.estimator import Placement, Stage, estimate, max_batch_size
+from repro.core.modelspec import LayerSpec, uniform_decoder
 from repro.hw.profiles import AWS_INSTANCES, L4, L40S, effective
 
 

@@ -1,9 +1,8 @@
 """Sharding rule resolution + HLO collective parsing."""
 
+import jax
 import numpy as np
 import pytest
-
-import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.launch import hlo_utils

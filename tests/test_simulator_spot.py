@@ -6,8 +6,8 @@ import numpy as np
 import pytest
 
 from repro.cluster import (ClusterSim, FTConfig, azure_conversation_like,
-                           generate_trace, select_scenario,
-                           interruption_events_for_window)
+                           generate_trace, interruption_events_for_window,
+                           select_scenario)
 from repro.cluster.spot_trace import PAPER_POOLS, window_score
 from repro.configs import get_config
 from repro.core import populate_cluster

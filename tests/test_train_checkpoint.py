@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.models import build_model, make_batch
 from repro.configs.shapes import ShapeSpec
+from repro.models import build_model, make_batch
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
 from repro.train.train_step import (choose_microbatches, init_train_state,

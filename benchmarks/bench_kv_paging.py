@@ -1,0 +1,131 @@
+"""Paged vs contiguous KV layout — admission capacity at equal cache bytes,
+decode throughput overhead of the block-table indirection, and the
+kv_restore recovery decision.
+
+The contiguous layout pins ``max_len`` KV rows per slot, so a mixed-length
+workload admits at most ``max_batch`` requests no matter how short they
+are. The paged layout spends the SAME cache bytes on a shared block pool
+and admits until the pool (not the slot count) is exhausted — the memory
+lever that lets heterogeneous stages run the large batches the roofline
+estimator assumes. check_smoke.py enforces:
+
+  * paged admits >= 1.5x the concurrent mixed-length requests of contig at
+    equal cache bytes;
+  * paged decode tok/s >= 0.8x contig at the same batch (the block-table
+    gather must not cost more than 20%);
+  * recovery ``decide()`` picks kv_restore over recompute when the store
+    holds the request's blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from benchmarks.common import Rows, save_json
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, ServeRequest
+
+MAX_LEN = 64
+BLOCK = 8
+EQ_BATCH = 8            # contig slots; paged gets the same bytes instead
+MAX_NEW = 4
+
+
+def _workload(cfg, n: int, seed: int):
+    rng = np.random.RandomState(seed)
+    lens = rng.randint(4, 29, size=n)
+    return [ServeRequest(
+        prompt=rng.randint(0, cfg.vocab, size=int(ln)).tolist(),
+        max_new_tokens=MAX_NEW) for ln in lens]
+
+
+def _throughput(cfg, params, layout: str) -> Dict:
+    """Equal-batch A/B: the paged indirection's decode overhead."""
+    eng = Engine(cfg, params, max_batch=EQ_BATCH, max_len=MAX_LEN,
+                 kv_layout=layout, block_size=BLOCK)
+    reqs = _workload(cfg, EQ_BATCH, seed=5)
+    t0 = time.perf_counter()
+    admitted = eng.admit_many(reqs)
+    t_admit = time.perf_counter() - t0
+    assert len(admitted) == EQ_BATCH
+    t0 = time.perf_counter()
+    eng.drain()
+    t_decode = time.perf_counter() - t0
+    dec_toks = eng.stats.tokens_out - EQ_BATCH
+    return {"layout": layout, "admit_s": t_admit, "decode_s": t_decode,
+            "decode_tok_s": dec_toks / max(t_decode, 1e-9),
+            "block_stats": eng.block_stats()}
+
+
+def _capacity(cfg, params) -> Dict:
+    """Max concurrently-admitted mixed-length requests at EQUAL cache
+    bytes: contig = EQ_BATCH slots x MAX_LEN rows; paged = the same token
+    capacity as a shared pool, slots no longer the limit."""
+    pool_tokens = EQ_BATCH * MAX_LEN
+    n_blocks = pool_tokens // BLOCK + 1           # +1 trash block
+    contig = Engine(cfg, params, max_batch=EQ_BATCH, max_len=MAX_LEN,
+                    kv_layout="contig")
+    n_contig = len(contig.admit_many(_workload(cfg, 64, seed=9)))
+    paged = Engine(cfg, params, max_batch=64, max_len=MAX_LEN,
+                   kv_layout="paged", block_size=BLOCK, n_blocks=n_blocks)
+    n_paged = len(paged.admit_many(_workload(cfg, 64, seed=9)))
+    stats = paged.block_stats()
+    return {"contig_admitted": n_contig, "paged_admitted": n_paged,
+            "ratio": n_paged / max(n_contig, 1),
+            "alloc_failures": paged.stats.alloc_failures,
+            "frag_tokens": stats["frag_tokens"],
+            "blocks_in_use": stats["blocks_in_use"]}
+
+
+def _recovery_decision() -> Dict:
+    """decide() must pick kv_restore over (chunked) recompute when the
+    tensor store holds the interrupted request's blocks."""
+    from repro.cluster.recovery import decide
+    from repro.core import populate_cluster
+    from repro.hw import AWS_INSTANCES, effective, paper_cluster
+    spec = get_config("llama-3.1-70b").to_modelspec()
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    plan = populate_cluster(spec, paper_cluster(), insts, 763, 232,
+                            beam_k=1)
+    p = plan.pipelines[0]
+    d = decide(spec, p, ctx=4096, remaining_grace_s=120.0, policy="hybrid",
+               efficiency=0.05, chunk=16, store_has_kv=True)
+    return {"mechanism": d.mechanism,
+            "kv_restore": 1.0 if d.mechanism == "kv_restore" else 0.0,
+            "kv_restore_s": d.kv_restore_s, "recompute_s": d.recompute_s,
+            "transfer_s": d.transfer_s}
+
+
+def run(rows: Rows) -> Dict:
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg, remat=False, attn_chunk=0)
+    params = model.init(jax.random.PRNGKey(0))
+    out: Dict = {}
+    for layout in ("contig", "paged"):
+        r = _throughput(cfg, params, layout)
+        out[layout] = r
+        rows.add(f"kv_paging/{layout}/decode", r["decode_s"] * 1e6,
+                 f"tok_s={r['decode_tok_s']:.0f} "
+                 f"admit_s={r['admit_s']:.3f}")
+    cap = _capacity(cfg, params)
+    out["capacity"] = cap
+    rows.add("kv_paging/capacity", 0.0,
+             f"contig={cap['contig_admitted']} "
+             f"paged={cap['paged_admitted']} ratio={cap['ratio']:.2f}x "
+             f"frag_tokens={cap['frag_tokens']} "
+             f"alloc_failures={cap['alloc_failures']}")
+    dec = _recovery_decision()
+    out["recovery"] = dec
+    rows.add("kv_paging/recovery_decide", 0.0,
+             f"kv_restore={dec['kv_restore']:.0f} "
+             f"kv_s={dec['kv_restore_s']:.2f} rc_s={dec['recompute_s']:.2f} "
+             f"tr_s={dec['transfer_s']:.2f} mech={dec['mechanism']}")
+    save_json("kv_paging", out)
+    return out

@@ -8,7 +8,11 @@ Enforced floors:
     (protects the PR-1 prefix-sum engine's 27x win);
   * bucketed admission >= 5x the seed (legacy) engine on the mixed-length
     32-request workload, with prefill traces bounded by the bucket count
-    (protects the PR-2 shape-stable execution plane).
+    (protects the PR-2 shape-stable execution plane);
+  * paged KV layout admits >= 1.5x the concurrent mixed-length requests of
+    contig at equal cache bytes, paged decode tok/s within 20% of contig,
+    and recovery decide() picks kv_restore when the store holds the blocks
+    (protects the paged-KV refactor, bench_kv_paging.py).
 """
 
 from __future__ import annotations
@@ -20,6 +24,8 @@ from typing import Dict, List, Tuple
 SEARCH_BUDGET_S = 10.0        # k<=3 paper-cluster search (PR-1 quoted 3.2s)
 SEARCH_BUDGET_K8_S = 40.0     # k=8 stress row (seed took > 80s)
 MIN_ADMIT_SPEEDUP = 5.0
+MIN_PAGED_CAPACITY_RATIO = 1.5
+MAX_PAGED_DECODE_REGRESSION = 0.20    # paged tok/s >= 0.8x contig
 
 
 def parse_rows(text: str) -> List[Tuple[str, float, str]]:
@@ -72,8 +78,43 @@ def check(rows: List[Tuple[str, float, str]]) -> List[str]:
                 failures.append(
                     f"bucketed prefill retraces {vals.get('retraces')} "
                     f"exceed bucket count {buckets[0]}")
+    failures += check_kv_paging(rows)
     errors = [n for n, _, _ in rows if n.endswith("/ERROR")]
     failures += [f"suite error row: {n}" for n in errors]
+    return failures
+
+
+def check_kv_paging(rows: List[Tuple[str, float, str]]) -> List[str]:
+    failures = []
+    cap = [d for n, _, d in rows if n == "kv_paging/capacity"]
+    if not cap:
+        failures.append("no kv_paging/capacity row found")
+    else:
+        ratio = derived_floats(cap[0]).get("ratio", 0.0)
+        if ratio < MIN_PAGED_CAPACITY_RATIO:
+            failures.append(
+                f"paged admission capacity {ratio}x < "
+                f"{MIN_PAGED_CAPACITY_RATIO}x contig floor")
+    tok = {}
+    for layout in ("contig", "paged"):
+        d = [d for n, _, d in rows if n == f"kv_paging/{layout}/decode"]
+        if not d:
+            failures.append(f"no kv_paging/{layout}/decode row found")
+        else:
+            tok[layout] = derived_floats(d[0]).get("tok_s", 0.0)
+    if len(tok) == 2 and tok["paged"] < \
+            (1.0 - MAX_PAGED_DECODE_REGRESSION) * tok["contig"]:
+        failures.append(
+            f"paged decode {tok['paged']:.0f} tok/s regresses > "
+            f"{MAX_PAGED_DECODE_REGRESSION:.0%} vs contig "
+            f"{tok['contig']:.0f} tok/s")
+    dec = [d for n, _, d in rows if n == "kv_paging/recovery_decide"]
+    if not dec:
+        failures.append("no kv_paging/recovery_decide row found")
+    elif derived_floats(dec[0]).get("kv_restore", 0.0) != 1.0:
+        failures.append(
+            "recovery decide() did not pick kv_restore with resident "
+            f"blocks: {dec[0]}")
     return failures
 
 

@@ -9,6 +9,7 @@ form by default; REPRO_FULL=1 enables paper-scale parameters.
   Fig 11 -> bench_beam_width              Table 4   -> bench_calibration
   §Roofline -> roofline_report            §4.2 search -> bench_search_speed
   §5 exec plane -> bench_engine_throughput
+  paged KV layout -> bench_kv_paging
 """
 
 from __future__ import annotations
@@ -29,6 +30,7 @@ def main() -> None:
         ("beam_width", "benchmarks.bench_beam_width"),
         ("search_speed", "benchmarks.bench_search_speed"),
         ("engine_throughput", "benchmarks.bench_engine_throughput"),
+        ("kv_paging", "benchmarks.bench_kv_paging"),
         ("placement", "benchmarks.bench_placement"),
         ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
         ("init_overlap", "benchmarks.bench_init_overlap"),

@@ -19,8 +19,11 @@ params = model.init(jax.random.PRNGKey(0))
 
 store = TensorStore()
 # prefill_chunk: long migration-recompute contexts admit chunk-by-chunk
-# between decode steps instead of stalling live slots
-srv = GlobalServer(cfg, store, max_batch=3, max_len=96, prefill_chunk=16)
+# between decode steps instead of stalling live slots; use_kv_migration:
+# interrupted requests publish their KV blocks to the store and re-attach
+# on the surviving pipeline instead of recomputing (§5.1 x §5.2)
+srv = GlobalServer(cfg, store, max_batch=3, max_len=96, prefill_chunk=16,
+                   use_kv_migration=True)
 srv.add_pipeline(params, ["spot-a1", "spot-a2"], weight=2.0)
 srv.add_pipeline(params, ["spot-b1"], weight=1.0)
 
@@ -38,8 +41,9 @@ in_flight = sum(1 for r in reqs if r.generated and not r.done)
 print(f"before interruption: {in_flight} requests mid-generation")
 
 affected = srv.interrupt_instance("spot-a1")
+published = sum(1 for _, k, _ in srv.events if k == "kv_publish")
 print(f"spot-a1 reclaimed -> {len(affected)} requests migrated "
-      f"(recompute-based, outputs preserved)")
+      f"({published} KV block sets published to the store, rest recompute)")
 
 srv.run_until_drained()
 ok = all(list(r.generated)[:len(snapshot[r.rid])] == snapshot[r.rid]
@@ -53,4 +57,5 @@ for p in srv.pipelines:
     s = p.engine.stats
     print(f"p{p.pid} engine: {s.prefills} prefills in "
           f"{s.prefill_batches} batches + {s.prefill_chunks} chunks, "
-          f"{s.prefill_retraces} prefill traces, {s.tokens_out} tokens")
+          f"{s.kv_imports} KV attaches, {s.prefill_retraces} prefill "
+          f"traces, {s.tokens_out} tokens; blocks {p.engine.block_stats()}")

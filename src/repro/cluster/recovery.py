@@ -10,12 +10,19 @@ an appropriate request recovery mechanism for each request individually."
 
 This module is that policy. Per interrupted request:
 
-    recompute_cost = bottleneck-stage prefill over (s_in + generated)
-    transfer_cost  = setup + kv_bytes(ctx) / effective_bw     [paper Fig 5]
+    recompute_cost  = bottleneck-stage prefill over (s_in + generated)
+    transfer_cost   = setup + kv_bytes(ctx) / effective_bw    [paper Fig 5]
+    kv_restore_cost = setup + kv_bytes(ctx) / store_bw        [§5.2 store]
     pick transfer iff  transfer_cost < recompute_cost
                    and transfer fits in the REMAINING grace budget
                    (the paper's §5.1 safety constraint — otherwise a
                    mid-transfer reclaim forces paying both costs)
+    pick kv_restore iff the store already HOLDS the request's blocks
+                   (``store_has_kv`` — the paged engine published them
+                   during the grace window, see serving/server.py) and it
+                   beats the other eligible mechanisms. Restoring from the
+                   store happens after revival, so it carries no grace-
+                   period constraint — publication already completed.
 
 The cluster simulator charges the chosen mechanism's cost on re-admission,
 so Fig-13/14-style runs quantify the hybrid's benefit on long-context
@@ -26,7 +33,6 @@ tests/test_recovery.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 from repro.core.estimator import Placement, stage_latencies
 from repro.core.modelspec import ModelSpec
@@ -34,14 +40,20 @@ from repro.core.modelspec import ModelSpec
 # Fig-5-calibrated transfer path constants (see bench_migration_tradeoff)
 TRANSFER_SETUP_S = 1.0
 TRANSFER_EFF = 0.25
+# tensor-store restore path: node-local host memory -> device, no network
+# race — a pinned-host-to-HBM copy (order PCIe/DMA bandwidth) plus the
+# attach round trip
+KV_RESTORE_SETUP_S = 0.05
+KV_RESTORE_BW_BPS = 8e9
 
 
 @dataclasses.dataclass(frozen=True)
 class RecoveryDecision:
-    mechanism: str            # "recompute" | "transfer"
+    mechanism: str            # "recompute" | "transfer" | "kv_restore"
     recompute_s: float
     transfer_s: float
     fits_grace: bool
+    kv_restore_s: float = float("inf")
 
 
 def kv_bytes_for_ctx(spec: ModelSpec, ctx: int) -> float:
@@ -85,22 +97,41 @@ def transfer_seconds(spec: ModelSpec, placement: Placement, ctx: int
             + nbytes / (TRANSFER_EFF * link.beta_bps))
 
 
+def kv_restore_seconds(spec: ModelSpec, ctx: int,
+                       store_bw_bps: float = KV_RESTORE_BW_BPS) -> float:
+    """Cost of re-attaching a request's KV blocks from the shared tensor
+    store (paged engines publish them during the grace window)."""
+    return KV_RESTORE_SETUP_S + kv_bytes_for_ctx(spec, ctx) / store_bw_bps
+
+
 def decide(spec: ModelSpec, placement: Placement, ctx: int,
            remaining_grace_s: float, policy: str = "hybrid",
            efficiency: float = 1.0, chunk: int = 0,
-           max_len: int = 0) -> RecoveryDecision:
+           max_len: int = 0, store_has_kv: bool = False,
+           store_bw_bps: float = KV_RESTORE_BW_BPS) -> RecoveryDecision:
     """policy: 'recompute' (paper default), 'transfer', or 'hybrid'
     (paper §8.1 future work). chunk > 0 prices recompute under the
     engine's chunked-prefill admission (max_len bounds it as the engine
-    does)."""
+    does). store_has_kv opens the kv_restore branch for the non-recompute
+    policies: the tensor store already holds the request's blocks, so
+    restore competes on cost without a grace constraint."""
     rc = recompute_seconds(spec, placement, ctx, efficiency, chunk=chunk,
                            max_len=max_len)
     tr = transfer_seconds(spec, placement, ctx)
+    kv = kv_restore_seconds(spec, ctx, store_bw_bps) if store_has_kv \
+        else float("inf")
     fits = tr <= remaining_grace_s
     if policy == "recompute":
         mech = "recompute"
     elif policy == "transfer":
-        mech = "transfer" if fits else "recompute"   # safety fallback
+        if kv < tr or (kv < float("inf") and not fits):
+            mech = "kv_restore"            # resident blocks beat the wire
+        else:
+            mech = "transfer" if fits else "recompute"   # safety fallback
     else:
-        mech = "transfer" if (fits and tr < rc) else "recompute"
-    return RecoveryDecision(mech, rc, tr, fits)
+        mech, best = "recompute", rc
+        if fits and tr < best:
+            mech, best = "transfer", tr
+        if kv < best:
+            mech, best = "kv_restore", kv
+    return RecoveryDecision(mech, rc, tr, fits, kv)

@@ -48,6 +48,11 @@ class FTConfig:
     # engine chunked-prefill size for migration recompute (0 = single-shot);
     # prices re-admission via recovery.recompute_seconds(chunk=...)
     prefill_chunk: int = 0
+    # paged engines publishing KV blocks to the shared tensor store during
+    # the grace window (serving/server.py use_kv_migration): opens
+    # recovery.decide's kv_restore branch — re-admission attaches blocks
+    # instead of recomputing the context
+    kv_store_migration: bool = False
 
 
 @dataclasses.dataclass
@@ -58,7 +63,8 @@ class ReqState:
     first_token_s: float = -1.0
     finish_s: float = -1.0
     migrations: int = 0
-    transfer_recovered: bool = False   # KV arrived via transfer: no re-prefill
+    # KV arrived via transfer or store restore: no re-prefill on re-admit
+    transfer_recovered: bool = False
 
 
 class SimPipeline:
@@ -235,8 +241,12 @@ class ClusterSim:
                            r.req.s_in + r.generated, ft.grace_period_s,
                            policy=self.ft.recovery_policy,
                            efficiency=self.efficiency,
-                           chunk=self.ft.prefill_chunk)
-                r.transfer_recovered = (d.mechanism == "transfer")
+                           chunk=self.ft.prefill_chunk,
+                           store_has_kv=self.ft.kv_store_migration)
+                # KV arrived by wire (transfer) or from the store
+                # (kv_restore): either way re-admission skips re-prefill
+                r.transfer_recovered = d.mechanism in ("transfer",
+                                                       "kv_restore")
             r.admit_s = -1.0
             r.migrations += 1
             requeue.append(r)

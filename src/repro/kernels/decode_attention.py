@@ -1,10 +1,18 @@
-"""GQA decode attention Pallas TPU kernel (single new token vs KV cache).
+"""GQA decode attention Pallas TPU kernels (single new token vs KV cache).
 
-The TPU-native replacement for paged-attention-style CUDA decode kernels:
-the cache stays contiguous (page tables suit GPU SMEM gathers, not TPU DMA
-engines); per-sequence validity comes from a position vector, masked while
-KV blocks stream through VMEM with a running-softmax accumulator in scratch.
-Memory-bound by design — the roofline term is the cache scan.
+Two layouts:
+
+* ``decode_attention`` — contiguous cache (B, S, nkv, d); per-sequence
+  validity comes from a position vector, masked while KV blocks stream
+  through VMEM with a running-softmax accumulator in scratch. Memory-bound
+  by design — the roofline term is the cache scan.
+* ``decode_attention_paged`` — block-pool cache (n_blocks, block, nkv, d)
+  plus a per-row block table. The grid's KV axis walks the table via
+  scalar prefetch: the BlockSpec index_map reads ``tbl[b, ik]`` so each
+  grid step DMAs exactly the pool block that backs virtual positions
+  ``[ik*block, (ik+1)*block)`` of row ``b`` — TPU-friendly because blocks
+  stay contiguous and the gather happens at DMA-descriptor granularity,
+  not per-element.
 """
 
 from __future__ import annotations
@@ -101,3 +109,93 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
         ],
         interpret=interpret,
     )(pos, q, cache_k, cache_v)
+
+
+def _dec_paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
+                      l_scr, acc_scr, *, scale: float, window: Optional[int],
+                      block: int, n_virt_blocks: int):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0, 0, :].astype(jnp.float32)              # (d,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (block, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+
+    # ik indexes VIRTUAL blocks of this row; the pool block holding them was
+    # selected by the index_map through the block table
+    pos = pos_ref[ib]
+    k_pos = ik * block + jax.lax.broadcasted_iota(jnp.int32, (block,), 0)
+    mask = k_pos <= pos
+    if window is not None:
+        mask &= k_pos > pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)
+    l_scr[0] = l_scr[0] * alpha + jnp.sum(p)
+    acc_scr[0, :] = (acc_scr[0, :] * alpha
+                     + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_scr[0] = m_cur
+
+    @pl.when(ik == n_virt_blocks - 1)
+    def _out():
+        denom = jnp.maximum(l_scr[0], 1e-30)
+        o_ref[0, 0, 0, :] = (acc_scr[0, :] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
+                           cache_v: jax.Array, block_tbl: jax.Array,
+                           pos: jax.Array, *, window: Optional[int] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B,1,nh,d); cache_k/v: (n_blocks, block, nkv, d) pool;
+    block_tbl: (B, max_blocks) int32 pool-block id per virtual block
+    (0 = trash block, masked); pos scalar or (B,) — the position of the
+    current (already written) token per sequence."""
+    b, _, nh, d = q.shape
+    block, nkv = cache_k.shape[1], cache_k.shape[2]
+    assert nh % nkv == 0
+    g = nh // nkv
+    mb = block_tbl.shape[1]
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    pos = pos.astype(jnp.int32)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_dec_paged_kernel, scale=scale, window=window,
+                               block=block, n_virt_blocks=mb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # block table + positions
+        grid=(b, nh, mb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda ib, ih, ik, tbl, pos: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, block, 1, d),
+                         lambda ib, ih, ik, tbl, pos, g=g:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+            pl.BlockSpec((1, block, 1, d),
+                         lambda ib, ih, ik, tbl, pos, g=g:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda ib, ih, ik, tbl, pos: (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, nh, d), q.dtype),
+        interpret=interpret,
+    )(block_tbl.astype(jnp.int32), pos, q, cache_k, cache_v)

@@ -11,7 +11,6 @@ import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
@@ -48,6 +47,15 @@ def _decode_jit(q, cache_k, cache_v, pos, *, window, block_kv):
     return _da.decode_attention(q, cache_k, cache_v, pos, window=window,
                                 block_kv=min(block_kv, cache_k.shape[1]),
                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window",))
+def decode_attention_paged(q, cache_k, cache_v, block_tbl, pos, *,
+                           window: Optional[int] = None):
+    """Block-pool decode kernel; matches
+    models.attention.decode_attention_paged's signature."""
+    return _da.decode_attention_paged(q, cache_k, cache_v, block_tbl, pos,
+                                      window=window, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -8,7 +8,6 @@ Pallas kernels in ``repro.kernels`` are the TPU runtime path, selected via
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple, Optional, Tuple
 
@@ -183,6 +182,98 @@ def chunk_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
         cache_k = cache_k.astype(q.dtype)
         cache_v = cache_v.astype(q.dtype)
     return sdpa(q, cache_k, cache_v, mask)
+
+
+# ---------------------------------------------------------------------------
+# Paged (block-table) KV cache — reference path
+#
+# The pool holds ``n_blocks`` fixed-size token blocks per layer:
+# ``cache_k/v: (n_blocks, block, nkv, d)`` (a per-layer slice of the stacked
+# ``(L, n_blocks, block, nkv, d)`` engine pool). ``block_tbl: (B, max_blocks)``
+# maps slot-virtual position t to pool block ``block_tbl[b, t // block]`` at
+# offset ``t % block``; unallocated entries point at the reserved trash block
+# 0, whose contents position masking keeps invisible. These are the pure-jnp
+# oracles for the Pallas gather kernel in ``repro.kernels.decode_attention``.
+# ---------------------------------------------------------------------------
+def _gather_pages(cache_k: jax.Array, cache_v: jax.Array,
+                  block_tbl: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Materialize each row's virtual KV view: (B, max_blocks*block, nkv, d)."""
+    b, mb = block_tbl.shape
+    blk = cache_k.shape[1]
+    pk = jnp.take(cache_k, block_tbl, axis=0)     # (B, MB, blk, nkv, d)
+    pv = jnp.take(cache_v, block_tbl, axis=0)
+    shape = (b, mb * blk) + cache_k.shape[2:]
+    return pk.reshape(shape), pv.reshape(shape)
+
+
+def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
+                           cache_v: jax.Array, block_tbl: jax.Array,
+                           pos: jax.Array, window: Optional[int] = None
+                           ) -> jax.Array:
+    """Block-table ``decode_attention``. q: (B,1,nh,d); cache_k/v:
+    (n_blocks, block, nkv, d); pos scalar or (B,), position of the current
+    (already written) token."""
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (q.shape[0],))
+    pk, pv = _gather_pages(cache_k, cache_v, block_tbl)
+    kpos = jnp.arange(pk.shape[1])
+    valid = kpos[None, :] <= pos[:, None]
+    if window is not None:
+        valid &= kpos[None, :] > (pos[:, None] - window)
+    mask = valid[:, None, None, None, :]
+    if pk.dtype != q.dtype:
+        pk, pv = pk.astype(q.dtype), pv.astype(q.dtype)
+    return sdpa(q, pk, pv, mask)
+
+
+def chunk_attention_paged(q: jax.Array, cache_k: jax.Array,
+                          cache_v: jax.Array, block_tbl: jax.Array,
+                          q_pos: jax.Array, window: Optional[int] = None
+                          ) -> jax.Array:
+    """Block-table ``chunk_attention``: (B,C) queries at absolute positions
+    ``q_pos`` against each row's gathered pages."""
+    pk, pv = _gather_pages(cache_k, cache_v, block_tbl)
+    kpos = jnp.arange(pk.shape[1])
+    valid = kpos[None, None, :] <= q_pos[:, :, None]        # (B, C, S)
+    if window is not None:
+        valid &= kpos[None, None, :] > (q_pos[:, :, None] - window)
+    mask = valid[:, None, None, :, :]
+    if pk.dtype != q.dtype:
+        pk, pv = pk.astype(q.dtype), pv.astype(q.dtype)
+    return sdpa(q, pk, pv, mask)
+
+
+def cache_write_token_paged(cache_k: jax.Array, cache_v: jax.Array,
+                            k: jax.Array, v: jax.Array, pos: jax.Array,
+                            block_tbl: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Write one token's K/V (B,1,nkv,d) at per-row virtual position ``pos``
+    through the block table. Dead/frozen rows whose table entry is the trash
+    block write garbage there (never read)."""
+    blk = cache_k.shape[1]
+    k = k.astype(cache_k.dtype)
+    v = v.astype(cache_v.dtype)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (k.shape[0],))
+    dest = jnp.take_along_axis(block_tbl, (pos // blk)[:, None],
+                               axis=1)[:, 0]                 # (B,)
+    off = pos % blk
+    return cache_k.at[dest, off].set(k[:, 0]), cache_v.at[dest, off].set(
+        v[:, 0])
+
+
+def cache_write_chunk_paged(cache_k: jax.Array, cache_v: jax.Array,
+                            k: jax.Array, v: jax.Array, base: jax.Array,
+                            block_tbl: jax.Array
+                            ) -> Tuple[jax.Array, jax.Array]:
+    """Write a C-token chunk's K/V (B,C,nkv,d) at virtual positions
+    [base, base+C) through the block table."""
+    blk = cache_k.shape[1]
+    t = base + jnp.arange(k.shape[1])                        # (C,)
+    dest = jnp.take(block_tbl, t // blk, axis=1)             # (B, C)
+    off = t % blk                                            # (C,) broadcasts
+    return (cache_k.at[dest, off].set(k.astype(cache_k.dtype)),
+            cache_v.at[dest, off].set(v.astype(cache_v.dtype)))
 
 
 def cache_write_token(cache_k: jax.Array, cache_v: jax.Array, k: jax.Array,

@@ -13,9 +13,7 @@ scans groups of (period Mamba2 layers + one shared-attention application).
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.ad_checkpoint
@@ -225,6 +223,28 @@ class LM:
             o = o + p["bo"]
         return o, ck, cv, slot_new
 
+    def _attn_decode_paged(self, p: Dict, x: jax.Array, pos, cache_k,
+                           cache_v, block_tbl):
+        """One-token attention against this layer's block pool: write the
+        token through the block table, attend over gathered pages."""
+        c = self.cfg
+        positions = self._decode_positions(pos, x.shape[0])
+        q, k, v = self._qkv(p, x, positions)
+        ck, cv = attn.cache_write_token_paged(cache_k, cache_v, k, v, pos,
+                                              block_tbl)
+        if self.use_pallas:
+            from repro.kernels import ops as kops
+            o = kops.decode_attention_paged(q, ck, cv, block_tbl, pos,
+                                            window=c.swa_window)
+        else:
+            o = attn.decode_attention_paged(q, ck, cv, block_tbl, pos,
+                                            window=c.swa_window)
+        o = o.reshape(x.shape[0], 1, c.n_heads * c.hd)
+        o = o @ p["wo"]
+        if "bo" in p:
+            o = o + p["bo"]
+        return o, ck, cv
+
     def _decode_positions(self, pos, batch):
         c = self.cfg
         if pos.ndim == 0:
@@ -282,12 +302,23 @@ class LM:
         h = self.norm(x, p["ln_mlp"])
         return x + self._mlp_or_moe(p, h), ck, cv, slot_new
 
-    def _dense_layer_chunk(self, p: Dict, x, q_pos, ck, cv, base):
+    def _dense_layer_decode_paged(self, p: Dict, x, pos, ck, cv, block_tbl):
+        h = self.norm(x, p["ln_attn"])
+        a, ck, cv = self._attn_decode_paged(p["attn"], h, pos, ck, cv,
+                                            block_tbl)
+        x = x + a
+        h = self.norm(x, p["ln_mlp"])
+        return x + self._mlp_or_moe(p, h), ck, cv
+
+    def _dense_layer_chunk(self, p: Dict, x, q_pos, ck, cv, base,
+                           block_tbl=None):
         """Chunked-prefill layer body: C new tokens against a linear cache.
 
         Writes the chunk's K/V at [base, base+C) and attends every query
         against the whole cache under per-query position masking — the
-        C-token generalization of ``_dense_layer_decode``.
+        C-token generalization of ``_dense_layer_decode``. With
+        ``block_tbl`` the cache slice is a block pool and writes/reads go
+        through the table.
         """
         c = self.cfg
         h = self.norm(x, p["ln_attn"])
@@ -295,14 +326,20 @@ class LM:
         if c.m_rope:
             positions = jnp.broadcast_to(q_pos[None], (3,) + q_pos.shape)
         q, k, v = self._qkv(p["attn"], h, positions)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            ck, k.astype(ck.dtype), base, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cv, v.astype(cv.dtype), base, axis=1)
         # intentionally jnp even under use_pallas: no chunk kernel with a
         # KV-history operand exists yet (ROADMAP "Pallas prefill-chunk
         # kernel"); prefill/decode still route to the kernels
-        o = attn.chunk_attention(q, ck, cv, q_pos, window=c.swa_window)
+        if block_tbl is not None:
+            ck, cv = attn.cache_write_chunk_paged(ck, cv, k, v, base,
+                                                  block_tbl)
+            o = attn.chunk_attention_paged(q, ck, cv, block_tbl, q_pos,
+                                           window=c.swa_window)
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), base, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), base, axis=1)
+            o = attn.chunk_attention(q, ck, cv, q_pos, window=c.swa_window)
         o = o.reshape(x.shape[0], x.shape[1], c.n_heads * c.hd) @ p["attn"]["wo"]
         if "bo" in p["attn"]:
             o = o + p["attn"]["bo"]
@@ -459,16 +496,36 @@ class LM:
         return loss + aux_w * moe_aux / max(1, c.n_layers)
 
     def init_cache(self, batch: int, max_len: int, ring: bool = True,
-                   vector_pos: bool = False) -> Dict:
+                   vector_pos: bool = False, kv_layout: str = "contig",
+                   n_blocks: int = 0, block_size: int = 16) -> Dict:
         """Zero cache (also mirrors the dry-run ShapeDtypeStruct layout).
 
         ring=False allocates SWA archs a full-length linear cache (window
         masking instead of ring slots) — required for continuous batching
-        with per-sequence positions (vector_pos)."""
+        with per-sequence positions (vector_pos).
+
+        kv_layout="paged" allocates the KV as a pool of ``n_blocks``
+        ``block_size``-token blocks (L, n_blocks, block, nkv, d) shared by
+        all rows, plus a per-row ``block_tbl`` (batch, ceil(max_len/block))
+        mapping virtual positions to pool blocks (entry 0 = reserved trash
+        block). Attention families only; SWA applies via window masking on
+        virtual positions (no ring)."""
         c = self.cfg
         pos0 = (jnp.zeros((batch,), jnp.int32) if vector_pos
                 else jnp.zeros((), jnp.int32))
         cache: Dict[str, Any] = {"pos": pos0}
+        if kv_layout == "paged":
+            if c.family in ("ssm", "hybrid"):
+                raise ValueError("paged KV requires attention caches")
+            max_blocks = -(-max_len // block_size)
+            if n_blocks <= 0:
+                n_blocks = batch * max_blocks + 1       # capacity == contig
+            cache["k"] = jnp.zeros(
+                (c.n_layers, n_blocks, block_size, c.n_kv_heads, c.hd),
+                self.dtype)
+            cache["v"] = jnp.zeros_like(cache["k"])
+            cache["block_tbl"] = jnp.zeros((batch, max_blocks), jnp.int32)
+            return cache
         if c.family in ("ssm", "hybrid"):
             conv_ch = c.d_inner + 2 * c.ssm_state
             cache["conv"] = jnp.zeros(
@@ -512,8 +569,8 @@ class LM:
 
     def prefill(self, params: Dict, inputs: Dict,
                 max_len: Optional[int] = None, ring: bool = True,
-                last_pos: Optional[jax.Array] = None
-                ) -> Tuple[jax.Array, Dict]:
+                last_pos: Optional[jax.Array] = None,
+                cache: Optional[Dict] = None) -> Tuple[jax.Array, Dict]:
         """Prompt -> (last-position logits (B, Vpad), filled cache).
 
         The returned cache is allocated at ``max_len`` (>= prompt length).
@@ -521,7 +578,10 @@ class LM:
         last_pos (B,) reads logits at a per-row position instead of the
         final one — the right-padded batched-prefill case, where row i's
         real prompt ends at last_pos[i] (causality keeps pad columns from
-        leaking into real rows).
+        leaking into real rows). A *paged* ``cache`` (from
+        ``init_cache(kv_layout="paged")`` with allocated block tables)
+        receives the prompt K/V through its block tables instead of a fresh
+        contiguous allocation.
         """
         c = self.cfg
         x = self.embed(params, inputs)
@@ -539,6 +599,8 @@ class LM:
         else:
             last = x[jnp.arange(b), last_pos][:, None, :]
         logits = self.logits(params, last)[:, 0, :]
+        if cache is not None and "block_tbl" in cache:
+            return logits, self._write_prefill_paged(cache, aux, s)
         cache = self.init_cache(b, max_len, ring=ring)
         cache["pos"] = jnp.array(s, jnp.int32)
         window = c.swa_window if ring else None
@@ -560,6 +622,23 @@ class LM:
                 cache["slot_pos"] = slot_new
         return logits, cache
 
+    def _write_prefill_paged(self, cache: Dict, aux: Dict, s: int) -> Dict:
+        """Scatter stacked prefill K/V (L,B,S,nkv,d) into the block pool
+        through each row's block table."""
+        tbl = cache["block_tbl"]
+        blk = cache["k"].shape[2]
+        t = jnp.arange(s)
+        dest = jnp.take(tbl, t // blk, axis=1)               # (B, S)
+        off = t % blk                                        # broadcasts
+        out = dict(cache)
+        out["k"] = cache["k"].at[:, dest, off].set(
+            aux["k"].astype(cache["k"].dtype))
+        out["v"] = cache["v"].at[:, dest, off].set(
+            aux["v"].astype(cache["v"].dtype))
+        out["pos"] = jnp.broadcast_to(
+            jnp.array(s, jnp.int32), cache["pos"].shape)
+        return out
+
     def prefill_chunk(self, params: Dict, cache: Dict, tokens: jax.Array,
                       base: jax.Array,
                       last_pos: Optional[jax.Array] = None
@@ -573,8 +652,10 @@ class LM:
         mathematically identical to one full prefill — that is what lets
         migration recompute interleave with live decode without a
         head-of-line stall. Attention families only (SSM state would need
-        carried recurrence). Returns (logits at ``last_pos`` (default: last
-        chunk column), updated cache).
+        carried recurrence). Works on linear and paged caches (the block
+        table threads through the stacked-layer scan as an invariant).
+        Returns (logits at ``last_pos`` (default: last chunk column),
+        updated cache).
         """
         c = self.cfg
         assert c.family not in ("ssm", "hybrid"), \
@@ -583,10 +664,12 @@ class LM:
         x = jnp.take(params["embed"]["tok"], tokens, axis=0)
         b, cl = tokens.shape
         q_pos = base + jnp.broadcast_to(jnp.arange(cl)[None], (b, cl))
+        tbl = cache.get("block_tbl")
 
         def body(h, xs):
             p_l, ck, cv = xs
-            h, ck, cv = self._dense_layer_chunk(p_l, h, q_pos, ck, cv, base)
+            h, ck, cv = self._dense_layer_chunk(p_l, h, q_pos, ck, cv, base,
+                                                block_tbl=tbl)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
@@ -624,6 +707,17 @@ class LM:
         elif c.family == "hybrid":
             x, new_cache = self._decode_hybrid(params, x, cache, new_cache,
                                                pos)
+        elif "block_tbl" in cache:
+            tbl = cache["block_tbl"]
+
+            def body(h, xs):
+                p_l, ck, cv = xs
+                h, ck, cv = self._dense_layer_decode_paged(
+                    p_l, h, pos, ck, cv, tbl)
+                return h, (ck, cv)
+            x, (ck, cv) = jax.lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            new_cache["k"], new_cache["v"] = ck, cv
         else:
             slot = cache.get("slot_pos")
 

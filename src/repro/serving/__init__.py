@@ -1,7 +1,8 @@
 from repro.serving.engine import Engine
+from repro.serving.kv_blocks import BlockManager
 from repro.serving.request import ServeRequest
 from repro.serving.server import FTTimes, GlobalServer, ServingPipeline
 from repro.serving.tensor_store import TensorStore
 
-__all__ = ["Engine", "ServeRequest", "FTTimes", "GlobalServer",
-           "ServingPipeline", "TensorStore"]
+__all__ = ["BlockManager", "Engine", "ServeRequest", "FTTimes",
+           "GlobalServer", "ServingPipeline", "TensorStore"]

@@ -1,8 +1,24 @@
 """Shape-stable batched continuous-batching engine (execution plane v2).
 
-Slot-based continuous batching over a fixed (max_batch, max_len) KV/state
-cache, rebuilt for admission throughput and trace stability:
+Slot-based continuous batching over a fixed KV/state cache, rebuilt for
+admission throughput and trace stability:
 
+* **Paged block-KV cache** (``kv_layout="paged"``, the default for
+  attention families) — the KV lives in a pool of fixed-size token blocks
+  shared by every slot, with a per-slot block table mapping virtual
+  positions to pool blocks (``serving/kv_blocks.py``). Admission reserves
+  ``ceil(total_ctx / block_size)`` blocks per request and frees them on
+  finish, so memory scales with *actual* context lengths instead of
+  ``max_batch * max_len`` — the lever that lets mixed-length workloads run
+  the large batches the roofline estimator assumes. When the pool can't
+  cover a request the engine refuses admission (``EngineStats.
+  alloc_failures`` — backpressure, not OOM). ``kv_layout="contig"`` keeps
+  the dense slot-row layout (required for SSM/MoE/enc-dec, and the A/B
+  baseline for benchmarks/bench_kv_paging.py).
+* **Block-granular KV migration** — ``export_kv``/``import_kv`` round-trip
+  a live request's blocks through the shared tensor store, so a migrated
+  request re-attaches its KV instead of recomputing it (§5.1 upgraded via
+  §5.2's store; see serving/server.py).
 * **Batched, bucketed prefill** — waiting requests are admitted in groups
   of ``prefill_group``, right-padded to a power-of-2 length bucket, so the
   jit'd prefill traces O(log max_len) shapes instead of one per prompt
@@ -11,27 +27,27 @@ cache, rebuilt for admission throughput and trace stability:
   SSM/hybrid trunks carry recurrent state through pad tokens and MoE
   expert capacity is shared across the flattened token stream, so those
   admit at exact length (and MoE at batch 1) to stay output-exact.
-* **Chunked prefill** — contexts longer than ``prefill_chunk`` (the
-  migration-recompute case: context = prompt + preserved output) prefill
-  chunk-by-chunk between decode steps, bounding head-of-line blocking for
-  live slots during interruption storms.
+* **Batched chunked prefill** — contexts longer than ``prefill_chunk``
+  (the migration-recompute case) prefill chunk-by-chunk between decode
+  steps, bounding head-of-line blocking for live slots during interruption
+  storms. Pendings admitted together advance as ONE dispatch per scheduling
+  step (a ``_PendingGroup``), not a batch-1 loop per request.
 * **Fused jit'd slot scatter** — one jit'd gather/scatter installs a whole
-  prefill group into its slots (cache donated via ``donate_argnums``),
-  replacing the per-cache-key Python ``at[].set`` loop.
+  prefill group into its slots (through the block tables under the paged
+  layout), replacing the per-cache-key Python ``at[].set`` loop.
 * **Masked, donated decode** — dead slots are masked (their cache position
   is frozen) instead of decoding token 0 forever; the cache buffer is
   donated across steps.
 
-Migration semantics fix over the seed engine: re-admission prefills
-``prompt + generated[:-1]`` and lets the first decode step feed
-``generated[-1]``, reproducing the uninterrupted run's cache layout
-byte-for-byte (the seed prefilled the full context and then fed the last
-token again, duplicating it at two positions). With greedy sampling an
-interrupted run now emits identical tokens to an uninterrupted one
-(paper §5.1, tested end-to-end in tests/test_engine_v2.py).
+Migration semantics: re-admission prefills ``prompt + generated[:-1]`` and
+lets the first decode step feed ``generated[-1]``, reproducing the
+uninterrupted run's cache layout byte-for-byte. With greedy sampling an
+interrupted run emits identical tokens to an uninterrupted one whether it
+recomputes or KV-attaches (paper §5.1, tested end-to-end in
+tests/test_engine_v2.py and tests/test_kv_paging.py).
 
 ``admission="legacy"`` keeps the seed's per-request batch-1 eager path
-(with the semantics fix) as the baseline for
+(contiguous layout only) as the baseline for
 benchmarks/bench_engine_throughput.py.
 """
 
@@ -47,6 +63,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import build_model
+from repro.serving.kv_blocks import BlockManager
 from repro.serving.request import ServeRequest
 
 _donation_filter_installed = False
@@ -74,14 +91,24 @@ class EngineStats:
     tokens_out: int = 0
     retraces: int = 0           # total jit traces (prefill+decode+scatter)
     prefill_retraces: int = 0   # prefill traces — bounded by bucket count
+    alloc_failures: int = 0     # paged admissions refused (backpressure)
+    kv_exports: int = 0         # KV block sets published for migration
+    kv_imports: int = 0         # re-admissions that attached KV (no prefill)
 
 
 @dataclasses.dataclass
-class _Pending:
-    """A long-context admission being prefilled chunk-by-chunk."""
+class _PendingMember:
     req: ServeRequest
     slot: int
     tokens: np.ndarray
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _PendingGroup:
+    """Long-context admissions prefilled chunk-by-chunk as ONE batched
+    dispatch per scheduling step (members share the chunk boundary)."""
+    members: List[_PendingMember]
     base: int = 0
     cache: Any = None
 
@@ -92,8 +119,10 @@ class Engine:
                  np_rng: Optional[np.random.RandomState] = None,
                  use_pallas: bool = False, prefill_group: int = 4,
                  prefill_bucket: int = 16, prefill_chunk: int = 0,
-                 admission: str = "bucketed"):
+                 admission: str = "bucketed", kv_layout: str = "auto",
+                 block_size: int = 16, n_blocks: int = 0):
         assert admission in ("bucketed", "legacy"), admission
+        assert kv_layout in ("auto", "paged", "contig"), kv_layout
         _silence_cpu_donation_warnings()
         self.cfg = cfg
         model_kw = dict(model_kw or {})
@@ -114,8 +143,31 @@ class Engine:
         self._group = 1 if self._moe else max(1, min(prefill_group,
                                                      max_batch))
         self._min_bucket = max(1, min(prefill_bucket, max_len))
+        # paged layout: dense-attention families only (SSM/hybrid carry
+        # recurrent state, not KV rows; enc-dec has a second cache; MoE
+        # rides the contig path with its batch-1 admission). The legacy
+        # baseline predates the block table and stays contiguous.
+        paged_ok = not (cfg.is_encdec or cfg.family in ("ssm", "hybrid")
+                        or self._moe or admission == "legacy")
+        if kv_layout == "auto":
+            kv_layout = "paged" if paged_ok else "contig"
+        elif kv_layout == "paged" and not paged_ok:
+            raise ValueError(
+                f"kv_layout='paged' unsupported for {cfg.name} "
+                f"(family={cfg.family}, admission={admission})")
+        self.kv_layout = kv_layout
+        self.bm: Optional[BlockManager] = None
+        self._tbl_dirty = False
         self.enc_frames = 8           # stubbed frontend frame count
-        if cfg.is_encdec:
+        if kv_layout == "paged":
+            mb = -(-max_len // block_size)
+            if n_blocks <= 0:
+                n_blocks = max_batch * mb + 1     # capacity-parity + trash
+            self.bm = BlockManager(n_blocks, block_size, max_batch, mb)
+            self.cache = self.model.init_cache(
+                max_batch, max_len, vector_pos=True, kv_layout="paged",
+                n_blocks=n_blocks, block_size=block_size)
+        elif cfg.is_encdec:
             self.cache = self.model.init_cache(max_batch, max_len,
                                                s_enc=self.enc_frames,
                                                vector_pos=True)
@@ -124,7 +176,7 @@ class Engine:
                                                ring=False, vector_pos=True)
         self.slots: List[Optional[ServeRequest]] = [None] * max_batch
         self.stats = EngineStats()
-        self._pending: List[_Pending] = []
+        self._pending: List[_PendingGroup] = []
         self._admit_finished: List[ServeRequest] = []
         self._legacy_shapes: set = set()
 
@@ -148,7 +200,7 @@ class Engine:
             return self.model.prefill_chunk(params, cache, tokens, base,
                                             last_pos=last_pos)
 
-        def scatter_fn(cache, group, slots, rows, lens):
+        def scatter_contig_fn(cache, group, slots, rows, lens):
             # Install ``group`` (batch G, possibly with pad rows remapped to
             # row 0 / slot[0] so duplicate writes agree) into slot rows.
             self.stats.retraces += 1
@@ -164,6 +216,28 @@ class Engine:
                         sel.astype(cache[key].dtype))
             return out
 
+        def scatter_paged_fn(cache, group, slots, rows, lens, tbls):
+            # Same contract, but K/V route through the destination slots'
+            # block tables (``tbls``: (G, max_blocks)). Positions past a
+            # row's real length land in the reserved trash block 0.
+            self.stats.retraces += 1
+            bs = cache["k"].shape[2]
+            out = dict(cache)
+            for key, small in group.items():
+                if key == "pos":
+                    out["pos"] = cache["pos"].at[slots].set(lens)
+                elif key in ("slot_pos", "block_tbl"):
+                    continue
+                else:
+                    sel = jnp.take(small, rows, axis=1)   # (L,G,S,nkv,d)
+                    t = jnp.arange(sel.shape[2])
+                    dest = jnp.take(tbls, t // bs, axis=1)       # (G, S)
+                    dest = jnp.where(t[None, :] < lens[:, None], dest, 0)
+                    out[key] = cache[key].at[:, dest, t % bs].set(
+                        sel.astype(cache[key].dtype))
+            out["block_tbl"] = cache["block_tbl"].at[slots].set(tbls)
+            return out
+
         def decode_fn(params, cache, tokens, live):
             self.stats.retraces += 1
             logits, new_cache = self.model.decode_step(params, cache, tokens)
@@ -175,7 +249,11 @@ class Engine:
 
         self._prefill_b = jax.jit(prefill_fn)
         self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
-        self._scatter = jax.jit(scatter_fn, donate_argnums=(0, 1))
+        # the group cache is NOT donated: a pending group's cache outlives
+        # the scatter of its early finishers
+        scatter = (scatter_paged_fn if kv_layout == "paged"
+                   else scatter_contig_fn)
+        self._scatter = jax.jit(scatter, donate_argnums=(0,))
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
 
     # -- buckets ----------------------------------------------------------------
@@ -214,6 +292,12 @@ class Engine:
         ctx = req.full_context()
         return ctx[:-1] if req.generated else ctx
 
+    @staticmethod
+    def _total_tokens(req: ServeRequest) -> int:
+        """Token capacity a request needs for its whole lifetime: current
+        context plus every token it may still generate."""
+        return req.ctx_len + req.max_new_tokens - len(req.generated)
+
     # -- slot management --------------------------------------------------------
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s is None]
@@ -222,7 +306,32 @@ class Engine:
         return [s for s in self.slots if s is not None]
 
     def _pending_slots(self) -> set:
-        return {p.slot for p in self._pending}
+        return {m.slot for g in self._pending for m in g.members
+                if not m.done}
+
+    def _free_blocks(self, slot: int) -> None:
+        if self.bm is not None and self.bm.slot_blocks(slot):
+            self.bm.free(slot)
+            self._tbl_dirty = True
+
+    def _sync_block_tbl(self) -> None:
+        """Push the host-side block table to the device cache when
+        allocations changed since the last dispatch."""
+        if self.bm is not None and self._tbl_dirty:
+            self.cache["block_tbl"] = jnp.asarray(self.bm.table)
+            self._tbl_dirty = False
+
+    def block_stats(self) -> Dict[str, int]:
+        """Paged-pool occupancy/fragmentation counters (empty for contig)."""
+        if self.bm is None:
+            return {}
+        return {"blocks_in_use": self.bm.blocks_in_use(),
+                "blocks_free": self.bm.blocks_free(),
+                "frag_tokens": self.bm.frag_tokens(),
+                "peak_blocks": self.bm.peak_blocks,
+                "block_size": self.bm.block_size,
+                "n_blocks": self.bm.n_blocks,
+                "alloc_failures": self.stats.alloc_failures}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: ServeRequest) -> bool:
@@ -230,40 +339,39 @@ class Engine:
 
     def admit_many(self, reqs: Sequence[ServeRequest]
                    ) -> List[ServeRequest]:
-        """Admit a prefix of ``reqs`` bounded by free slots.
+        """Admit a prefix of ``reqs`` bounded by free slots and (paged)
+        free KV blocks.
 
         Requests are grouped by length bucket and prefilled in batches of
-        ``prefill_group``; long contexts go to the chunked path. Returns
-        the admitted requests (finished ones surface via ``step()``)."""
+        ``prefill_group``; long contexts go to the chunked path (grouped
+        into one dispatch per step). Returns the admitted requests
+        (finished ones surface via ``step()``)."""
         free = self.free_slots()
-        take: List[ServeRequest] = []
-        slots_needed = 0
-        for r in reqs:               # strict prefix; done reqs need no slot
-            if not r.done:
-                if slots_needed >= len(free):
-                    break
-                slots_needed += 1
-            take.append(r)
-        if not take:
-            return []
-        free_iter = iter(free)
         admitted: List[ServeRequest] = []
         groups: Dict[int, List[Tuple[ServeRequest, List[int], int]]] = {}
-        for r in take:
-            if r.done:                # nothing to generate: pass through
+        chunked: List[Tuple[ServeRequest, List[int], int]] = []
+        for r in reqs:               # strict prefix; done reqs need no slot
+            if r.done:               # nothing to generate: pass through
                 self._admit_finished.append(r)
                 admitted.append(r)
                 continue
-            assert r.ctx_len + r.max_new_tokens - len(r.generated) \
-                <= self.max_len, "context exceeds engine max_len"
+            if not free:
+                break
+            assert self._total_tokens(r) <= self.max_len, \
+                "context exceeds engine max_len"
+            slot = free[0]
+            if self.bm is not None:
+                if not self.bm.alloc(slot, self._total_tokens(r)):
+                    self.stats.alloc_failures += 1
+                    break            # backpressure: leave r (and rest) queued
+                self._tbl_dirty = True
+            free.pop(0)
             toks = self._prefill_tokens(r)
-            slot = next(free_iter)
             if self.admission == "legacy":
                 self._admit_one_legacy(r, toks, slot)
             elif self._use_chunked(len(toks)):
                 self.slots[slot] = r
-                self._pending.append(
-                    _Pending(r, slot, np.asarray(toks, np.int32)))
+                chunked.append((r, toks, slot))
             else:
                 groups.setdefault(self._bucket(len(toks)), []).append(
                     (r, toks, slot))
@@ -271,6 +379,12 @@ class Engine:
         for blen, items in sorted(groups.items()):
             for i in range(0, len(items), self._group):
                 self._admit_group(items[i:i + self._group], blen)
+        # pendings admitted together share a group: one chunk dispatch per
+        # step for the whole group instead of a batch-1 loop
+        for i in range(0, len(chunked), self._group):
+            members = [_PendingMember(r, slot, np.asarray(toks, np.int32))
+                       for r, toks, slot in chunked[i:i + self._group]]
+            self._pending.append(_PendingGroup(members))
         return admitted
 
     def _admit_group(self, items, blen: int) -> None:
@@ -292,13 +406,19 @@ class Engine:
         slots[n:] = slots[0]
         logits, group_cache = self._prefill_b(
             self.params, jnp.asarray(tokens), jnp.asarray(lens - 1))
-        self.cache = self._scatter(self.cache, group_cache,
-                                   jnp.asarray(slots), jnp.asarray(rows),
-                                   jnp.asarray(lens))
+        self._scatter_group(group_cache, slots, rows, lens)
         first = np.asarray(self.model.sample_greedy(logits))
         self.stats.prefill_batches += 1
         for j, (r, toks, slot) in enumerate(items):
             self._install(r, slot, first[j])
+
+    def _scatter_group(self, group_cache, slots, rows, lens) -> None:
+        """Fused install of a (remapped) group cache into slot rows, routed
+        through the block tables under the paged layout."""
+        args = [jnp.asarray(slots), jnp.asarray(rows), jnp.asarray(lens)]
+        if self.bm is not None:
+            args.append(jnp.asarray(self.bm.table[slots]))
+        self.cache = self._scatter(self.cache, group_cache, *args)
 
     def _install(self, req: ServeRequest, slot: int, first_tok) -> None:
         """Post-prefill bookkeeping shared by all admission paths."""
@@ -309,6 +429,7 @@ class Engine:
             self.stats.tokens_out += 1
         if req.done:
             self.slots[slot] = None
+            self._free_blocks(slot)
             self._admit_finished.append(req)
 
     def _admit_one_legacy(self, req: ServeRequest, toks: List[int],
@@ -357,34 +478,50 @@ class Engine:
 
     # -- chunked prefill --------------------------------------------------------
     def _advance_pending(self) -> None:
-        """One chunk of prefill work per pending admission, interleaved
-        between decode steps (bounds head-of-line blocking)."""
+        """One chunk of prefill work per pending GROUP, interleaved between
+        decode steps (bounds head-of-line blocking; one dispatch covers
+        every member at the shared chunk boundary)."""
         c = self.prefill_chunk
-        still: List[_Pending] = []
-        for p in self._pending:
-            if p.cache is None:
-                p.cache = self.model.init_cache(1, self.max_len, ring=False)
-            end = min(p.base + c, len(p.tokens))
-            chunk = np.zeros((1, c), np.int32)
-            chunk[0, :end - p.base] = p.tokens[p.base:end]
-            last_idx = min(c - 1, len(p.tokens) - 1 - p.base)
-            logits, p.cache = self._chunk(
-                self.params, p.cache, jnp.asarray(chunk),
-                jnp.asarray(p.base, jnp.int32),
-                jnp.asarray([last_idx], jnp.int32))
+        still: List[_PendingGroup] = []
+        for grp in self._pending:
+            g = len(grp.members)
+            if grp.cache is None:
+                grp.cache = self.model.init_cache(g, self.max_len,
+                                                  ring=False)
+            chunk = np.zeros((g, c), np.int32)
+            last_idx = np.zeros((g,), np.int32)
+            for j, m in enumerate(grp.members):
+                if m.done:
+                    continue        # finished early: row computes pad zeros
+                end = min(grp.base + c, len(m.tokens))
+                chunk[j, :end - grp.base] = m.tokens[grp.base:end]
+                last_idx[j] = min(c - 1, len(m.tokens) - 1 - grp.base)
+            logits, grp.cache = self._chunk(
+                self.params, grp.cache, jnp.asarray(chunk),
+                jnp.asarray(grp.base, jnp.int32), jnp.asarray(last_idx))
             self.stats.prefill_chunks += 1
-            p.base = end
-            if p.base >= len(p.tokens):
-                lens = jnp.asarray([len(p.tokens)], jnp.int32)
-                self.cache = self._scatter(
-                    self.cache, p.cache, jnp.asarray([p.slot], jnp.int32),
-                    jnp.zeros((1,), jnp.int32), lens)
-                self.slots[p.slot] = None     # _install re-marks the slot
-                self._install(p.req, p.slot,
-                              self.model.sample_greedy(logits)[0])
-            else:
-                still.append(p)
+            grp.base += c
+            finishers = [(j, m) for j, m in enumerate(grp.members)
+                         if not m.done and grp.base >= len(m.tokens)]
+            if finishers:
+                first = np.asarray(self.model.sample_greedy(logits))
+                self._finish_pending(grp, finishers, first)
+            if not all(m.done for m in grp.members):
+                still.append(grp)
         self._pending = still
+
+    def _finish_pending(self, grp: _PendingGroup, finishers, first
+                        ) -> None:
+        """Scatter fully-prefilled members out of the group cache into
+        their slots (one fused dispatch for all of this step's finishers)."""
+        slots = np.array([m.slot for _, m in finishers], np.int32)
+        rows = np.array([j for j, _ in finishers], np.int32)
+        lens = np.array([len(m.tokens) for _, m in finishers], np.int32)
+        self._scatter_group(grp.cache, slots, rows, lens)
+        for j, m in finishers:
+            m.done = True
+            self.slots[m.slot] = None     # _install re-marks the slot
+            self._install(m.req, m.slot, first[j])
 
     # -- decode -----------------------------------------------------------------
     def step(self) -> List[ServeRequest]:
@@ -404,6 +541,7 @@ class Engine:
         for i in live:
             tokens[i, 0] = self.slots[i].generated[-1]
             mask[i] = True
+        self._sync_block_tbl()
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens),
                                           jnp.asarray(mask))
@@ -415,6 +553,7 @@ class Engine:
             if req.done:
                 finished.append(req)
                 self.slots[i] = None
+                self._free_blocks(i)
         self.stats.decode_steps += 1
         return finished
 
@@ -433,4 +572,68 @@ class Engine:
         self.slots = [None] * self.max_batch
         self._pending = []
         self._admit_finished = []
+        if self.bm is not None:
+            self.bm.free_all()
+            self._tbl_dirty = True
         return reqs
+
+    # -- block-granular KV migration (paper §5.1 x §5.2) ------------------------
+    def export_kv(self, slot: int, pos: Optional[int] = None) -> Dict:
+        """Snapshot a live slot's KV blocks for publication to the tensor
+        store. The payload is position-exact: importing it reproduces the
+        donor engine's cache state for that request byte-for-byte."""
+        assert self.bm is not None, "KV export requires the paged layout"
+        if pos is None:
+            pos = int(np.asarray(self.cache["pos"])[slot])
+        nb = -(-pos // self.bm.block_size) if pos > 0 else 0
+        ids = jnp.asarray(self.bm.table[slot, :nb].copy())
+        self.stats.kv_exports += 1
+        return {"k": self.cache["k"][:, ids], "v": self.cache["v"][:, ids],
+                "pos": int(pos), "block_size": self.bm.block_size,
+                "arch": self.cfg.name}
+
+    def export_live_kv(self) -> Dict[int, Dict]:
+        """Payloads for every live, fully-prefilled slot, keyed by request
+        id (mid-chunked-prefill slots have incomplete KV and are skipped —
+        those requests fall back to recompute)."""
+        if self.bm is None:
+            return {}
+        pend = self._pending_slots()
+        pos_host = np.asarray(self.cache["pos"])
+        return {r.rid: self.export_kv(slot, int(pos_host[slot]))
+                for slot, r in enumerate(self.slots)
+                if r is not None and slot not in pend}
+
+    def import_kv(self, req: ServeRequest, payload: Dict) -> bool:
+        """Admit ``req`` by attaching a published KV payload instead of
+        recomputing its context. Returns False (caller falls back to the
+        recompute path) on any incompatibility: contig layout, different
+        arch or block size, no slot, no blocks, or a payload whose position
+        doesn't match the request's migration state."""
+        if self.bm is None or payload.get("arch") != self.cfg.name \
+                or payload.get("block_size") != self.bm.block_size:
+            return False
+        if req.done or not req.generated:
+            return False
+        # invariant of the §5.1 layout: everything but the last generated
+        # token is in the cache; the first decode step feeds that token
+        if payload["pos"] != req.ctx_len - 1:
+            return False
+        free = self.free_slots()
+        if not free or self._total_tokens(req) > self.max_len:
+            return False
+        slot = free[0]
+        if not self.bm.alloc(slot, self._total_tokens(req)):
+            self.stats.alloc_failures += 1
+            return False
+        self._tbl_dirty = True
+        nb = payload["k"].shape[1]
+        ids = jnp.asarray(self.bm.table[slot, :nb].copy())
+        self.cache["k"] = self.cache["k"].at[:, ids].set(
+            payload["k"].astype(self.cache["k"].dtype))
+        self.cache["v"] = self.cache["v"].at[:, ids].set(
+            payload["v"].astype(self.cache["v"].dtype))
+        self.cache["pos"] = self.cache["pos"].at[slot].set(payload["pos"])
+        self.slots[slot] = req
+        self.stats.kv_imports += 1
+        return True

@@ -1,0 +1,110 @@
+"""Block-granular KV allocation for the paged cache layout.
+
+The contiguous layout pins a full ``max_len`` KV row per slot, so memory
+utilization collapses at high slot counts with mixed context lengths — the
+ROADMAP's paged-KV lift. Here the engine's KV pool is ``n_blocks`` fixed-size
+token blocks shared by every slot; the ``BlockManager`` owns the free list
+and a per-slot block table mapping virtual token positions to pool blocks:
+
+    virtual position t of slot s  ->  pool block table[s, t // block_size],
+                                      offset t % block_size
+
+Block id 0 is RESERVED as the trash block: unallocated table entries point
+at it, so jit'd scatters can route pad/dead-row writes somewhere harmless
+without data-dependent shapes, and gathers through an unallocated entry read
+garbage that position masking already hides. Real allocations hand out ids
+from [1, n_blocks).
+
+Allocation is whole-request up front (``ceil(total_tokens / block_size)``
+blocks at admission, freed on finish/eviction): a request admitted can never
+hit an out-of-blocks condition mid-decode, so backpressure lives entirely at
+admission (``Engine`` counts the rejections in ``EngineStats.alloc_failures``
+and leaves the request queued instead of OOM-ing the pool).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+TRASH_BLOCK = 0
+
+
+class BlockManager:
+    def __init__(self, n_blocks: int, block_size: int, max_slots: int,
+                 max_blocks_per_slot: int):
+        assert n_blocks >= 2, "need at least the trash block plus one"
+        assert block_size >= 1
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self.max_blocks_per_slot = max_blocks_per_slot
+        # LIFO free list keeps recently-freed (cache-warm) blocks hot
+        self._free: List[int] = list(range(n_blocks - 1, TRASH_BLOCK, -1))
+        # per-slot block table; row width = blocks needed for max_len
+        self.table = np.full((max_slots, max_blocks_per_slot), TRASH_BLOCK,
+                             np.int32)
+        self._owned: Dict[int, List[int]] = {}
+        self._tokens: Dict[int, int] = {}     # requested tokens per slot
+        self.peak_blocks = 0
+
+    # -- sizing -----------------------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.block_size)
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        need = self.blocks_for(n_tokens)
+        return need <= len(self._free) and need <= self.max_blocks_per_slot
+
+    # -- alloc / free -----------------------------------------------------------
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        """Reserve blocks covering ``n_tokens`` for ``slot``. All-or-nothing:
+        returns False when the pool can't cover the request, leaving the
+        free list untouched (the engine counts rejections in
+        ``EngineStats.alloc_failures``)."""
+        assert slot not in self._owned, f"slot {slot} already allocated"
+        if not self.can_alloc(n_tokens):
+            return False
+        need = self.blocks_for(n_tokens)
+        ids = [self._free.pop() for _ in range(need)]
+        self._owned[slot] = ids
+        self._tokens[slot] = n_tokens
+        self.table[slot, :need] = ids
+        self.table[slot, need:] = TRASH_BLOCK
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
+        return True
+
+    def free(self, slot: int) -> int:
+        """Return ``slot``'s blocks to the pool; zero its table row."""
+        ids = self._owned.pop(slot, [])
+        self._tokens.pop(slot, None)
+        self._free.extend(reversed(ids))
+        self.table[slot, :] = TRASH_BLOCK
+        return len(ids)
+
+    def free_all(self) -> None:
+        for slot in list(self._owned):
+            self.free(slot)
+
+    # -- introspection ----------------------------------------------------------
+    def slot_blocks(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, []))
+
+    def blocks_in_use(self) -> int:
+        return sum(len(v) for v in self._owned.values())
+
+    def blocks_free(self) -> int:
+        return len(self._free)
+
+    def frag_tokens(self) -> int:
+        """Internal fragmentation: allocated token capacity beyond what the
+        owning requests asked for (the tail of each slot's last block)."""
+        return sum(len(ids) * self.block_size - self._tokens[s]
+                   for s, ids in self._owned.items())
+
+    def check_no_leak(self) -> bool:
+        """Every non-trash block is either free or owned exactly once."""
+        owned = [b for ids in self._owned.values() for b in ids]
+        seen = owned + self._free
+        return (len(seen) == len(set(seen)) == self.n_blocks - 1
+                and TRASH_BLOCK not in seen)

@@ -15,6 +15,14 @@ placement). The ``GlobalServer``:
     onto surviving pipelines, or back onto the interrupted pipeline's own
     queue when none survive (it revives at ``down_until``; requests must
     never be silently dropped);
+  * with ``use_kv_migration`` (and paged-KV engines + a store): additionally
+    publishes each interrupted request's live KV blocks to the tensor store
+    (``Engine.export_kv``), so re-admission ATTACHES the blocks
+    (``Engine.import_kv``) and skips context recomputation entirely —
+    SpotServe-style KV migration carried by the §5.2 store instead of a
+    point-to-point transfer racing the grace period. Any incompatibility
+    (contig engine, different block size, stale payload) falls back to the
+    §5.1 recompute path;
   * rebuilds the pipeline with a replacement instance: with the shared
     tensor store the new engine ATTACHES to resident weights (concurrent
     initialization, §5.2) — the rebuild overlaps serving on the other
@@ -66,11 +74,16 @@ class GlobalServer:
                  max_len: int = 128, use_pallas: bool = False,
                  prefill_chunk: int = 0,
                  est_workload: Tuple[int, int] = (763, 232),
-                 engine_kw: Optional[Dict] = None):
+                 engine_kw: Optional[Dict] = None,
+                 use_kv_migration: bool = False):
         self.cfg = cfg
         self.store = store
         self.ft = ft or FTTimes()
         self.use_migration = use_migration
+        # KV-block migration is opt-in: it trades store bytes for skipped
+        # recompute, and the recompute path must stay the tested default
+        # (the paper's §5.1 baseline; recovery.decide weighs the two)
+        self.use_kv_migration = use_kv_migration
         self.use_concurrent_init = use_concurrent_init
         self.max_batch = max_batch
         self.max_len = max_len
@@ -138,9 +151,33 @@ class GlobalServer:
         return best
 
     # -- serving loop -------------------------------------------------------------
+    _KV_MODEL = "__kv__"
+
+    def _kv_key(self, req: ServeRequest) -> str:
+        return f"r{req.rid}"
+
+    def _admit_kv_attached(self, p: ServingPipeline) -> None:
+        """Admit queued requests whose KV blocks are resident in the store
+        by attaching them (no recompute). Successful imports consume the
+        payload; failures leave the request queued for the normal path."""
+        rest: List[ServeRequest] = []
+        for r in p.queue:
+            key = self._kv_key(r)
+            payload = self.store.take(self._KV_MODEL, key)  # single consumer
+            if payload is None:
+                rest.append(r)
+            elif p.engine.import_kv(r, payload):
+                self.events.append((self.clock, "kv_attach", key))
+            else:
+                # incompatible here; republish for a later/other pipeline
+                self.store.put(self._KV_MODEL, key, payload)
+                rest.append(r)
+        p.queue[:] = rest
+
     def step(self) -> int:
-        """One scheduling round: batched admission of queued requests, one
-        decode step per alive pipeline. Returns tokens emitted."""
+        """One scheduling round: batched admission of queued requests (KV
+        attach first, prefill for the rest), one decode step per alive
+        pipeline. Returns tokens emitted."""
         emitted = 0
         for p in self.pipelines:
             if not p.alive:
@@ -150,6 +187,8 @@ class GlobalServer:
                 else:
                     continue
             toks_before = p.engine.stats.tokens_out
+            if self.use_kv_migration and self.store is not None and p.queue:
+                self._admit_kv_attached(p)
             admitted = p.engine.admit_many(p.queue)
             del p.queue[:len(admitted)]
             fin = p.engine.step()
@@ -207,6 +246,15 @@ class GlobalServer:
                 continue
             self.events.append((self.clock, "interrupt",
                                 f"p{p.pid}:{instance_id}"))
+            # publish live KV blocks DURING the grace period (the engine is
+            # still up): replacement/surviving pipelines attach instead of
+            # recomputing (§5.1 x §5.2)
+            if (self.use_kv_migration and self.use_migration
+                    and self.store is not None):
+                for rid, payload in p.engine.export_live_kv().items():
+                    self.store.put(self._KV_MODEL, f"r{rid}", payload)
+                    self.events.append((self.clock, "kv_publish",
+                                        f"r{rid}"))
             # old pipeline serves through the grace period
             grace_end = self.clock + ft.grace_period_s
             if self.use_concurrent_init and self.store is not None:

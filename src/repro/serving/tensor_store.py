@@ -13,6 +13,17 @@ in the store is O(1) — ``attach`` returns the same ``jax.Array`` objects —
 while a cold partition pays the (simulated or real) load cost once. The
 store also tracks load timings so concurrent-initialization benchmarks can
 report the paper's Fig-16 breakdown.
+
+Beyond weights, the store carries migrated KV-block payloads (one key per
+interrupted request — see serving/server.py), so residency is no longer
+monotone: ``evict_to`` reclaims unreferenced keys in LRU order down to a
+byte budget (``budget_bytes`` enforces it automatically on every insert),
+keeping published KV from pinning memory forever.
+
+Accounting invariant (regression-tested): every resident key has exactly
+one entry in each of the params/refcount/bytes/LRU maps, whichever path
+inserted it (``put``, ``put_or_attach`` or ``load``), so
+``resident_bytes``/``refcount`` can never drift between paths.
 """
 
 from __future__ import annotations
@@ -21,36 +32,64 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
+Key = Tuple[str, str]
+
 
 @dataclasses.dataclass
 class LoadRecord:
-    key: Tuple[str, str]
+    key: Key
     wall_s: float
     cold: bool
 
 
 class TensorStore:
-    def __init__(self, load_time_model: Optional[Callable[[int], float]] = None):
+    def __init__(self, load_time_model: Optional[Callable[[int], float]] = None,
+                 budget_bytes: Optional[int] = None):
         """load_time_model: bytes -> seconds, used by the virtual clock to
         model remote-storage fetch (paper: custom raw-binary shards so each
-        node downloads only its partition)."""
-        self._store: Dict[Tuple[str, str], Any] = {}
-        self._refcount: Dict[Tuple[str, str], int] = {}
+        node downloads only its partition). budget_bytes: soft cap enforced
+        by LRU eviction of unreferenced keys on every insert (None = no
+        cap; referenced keys are never evicted, so the store may exceed the
+        budget while every byte is pinned)."""
+        self._store: Dict[Key, Any] = {}
+        self._refcount: Dict[Key, int] = {}
+        self._bytes: Dict[Key, int] = {}
+        self._last_used: Dict[Key, int] = {}
+        self._clock = 0
         self.loads: list[LoadRecord] = []
         self.load_time_model = load_time_model or (lambda nbytes: 0.0)
+        self.budget_bytes = budget_bytes
 
+    # -- internal bookkeeping (single path for every insert/acquire) ------------
+    def _touch(self, key: Key) -> None:
+        self._clock += 1
+        self._last_used[key] = self._clock
+
+    def _register(self, key: Key, params: Any) -> None:
+        self._store[key] = params
+        self._bytes[key] = _tree_bytes(params)
+        self._refcount.setdefault(key, 0)
+        self._touch(key)
+        if self.budget_bytes is not None:
+            self.evict_to(self.budget_bytes)
+
+    def _acquire(self, key: Key) -> Any:
+        self._refcount[key] += 1
+        self._touch(key)
+        return self._store[key]
+
+    # -- public API -------------------------------------------------------------
     def put(self, model: str, partition: str, params: Any) -> None:
-        self._store[(model, partition)] = params
-        self._refcount.setdefault((model, partition), 0)
+        """Publish without acquiring: the key is resident at refcount 0
+        (evictable) until someone attaches."""
+        self._register((model, partition), params)
 
     def contains(self, model: str, partition: str) -> bool:
         return (model, partition) in self._store
 
     def attach(self, model: str, partition: str) -> Any:
         """Zero-copy: returns the stored arrays themselves."""
-        key = (model, partition)
-        self._refcount[key] = self._refcount.get(key, 0) + 1
-        return self._store[key]
+        return self._acquire((model, partition))
 
     def put_or_attach(self, model: str, partition: str,
                       params: Any) -> Tuple[Any, bool]:
@@ -60,13 +99,23 @@ class TensorStore:
         key = (model, partition)
         cold = key not in self._store
         if cold:
-            self._store[key] = params
-        self._refcount[key] = self._refcount.get(key, 0) + 1
-        return self._store[key], cold
+            self._register(key, params)
+        return self._acquire(key), cold
+
+    def take(self, model: str, partition: str) -> Optional[Any]:
+        """Consume a key: return its params and drop it from the store
+        (single-consumer payloads, e.g. a migrated request's KV blocks).
+        None when absent."""
+        key = (model, partition)
+        if key not in self._store:
+            return None
+        params = self._store[key]
+        self._drop(key)
+        return params
 
     def resident_bytes(self) -> int:
         """Total bytes pinned by the store (capacity-planning metric)."""
-        return sum(_tree_bytes(v) for v in self._store.values())
+        return sum(self._bytes.values())
 
     def detach(self, model: str, partition: str) -> None:
         key = (model, partition)
@@ -76,13 +125,34 @@ class TensorStore:
     def refcount(self, model: str, partition: str) -> int:
         return self._refcount.get((model, partition), 0)
 
+    def _drop(self, key: Key) -> None:
+        self._store.pop(key, None)
+        self._refcount.pop(key, None)
+        self._bytes.pop(key, None)
+        self._last_used.pop(key, None)
+
     def evict_unreferenced(self) -> int:
         """Drop partitions with no attached engine (memory reclamation)."""
         dead = [k for k, c in self._refcount.items() if c == 0]
         for k in dead:
-            self._store.pop(k, None)
-            self._refcount.pop(k, None)
+            self._drop(k)
         return len(dead)
+
+    def evict_to(self, budget_bytes: int) -> int:
+        """LRU-evict unreferenced keys until ``resident_bytes`` fits the
+        budget (referenced keys are pinned and never touched). Returns
+        bytes freed."""
+        freed = 0
+        resident = self.resident_bytes()
+        victims = sorted((k for k, c in self._refcount.items() if c == 0),
+                         key=lambda k: self._last_used[k])
+        for k in victims:
+            if resident <= budget_bytes:
+                break
+            freed += self._bytes[k]
+            resident -= self._bytes[k]
+            self._drop(k)
+        return freed
 
     def load(self, model: str, partition: str,
              loader: Callable[[], Any]) -> Tuple[Any, float]:
@@ -90,17 +160,20 @@ class TensorStore:
         key = (model, partition)
         if key in self._store:
             self.loads.append(LoadRecord(key, 0.0, cold=False))
-            self._refcount[key] = self._refcount.get(key, 0) + 1
-            return self._store[key], 0.0
+            return self._acquire(key), 0.0
         t0 = time.perf_counter()
         params = loader()
-        nbytes = _tree_bytes(params)
-        virtual = self.load_time_model(nbytes)
-        self._store[key] = params
-        self._refcount[key] = 1
+        virtual = self.load_time_model(_tree_bytes(params))
+        self._register(key, params)
         self.loads.append(LoadRecord(key, time.perf_counter() - t0,
                                      cold=True))
-        return params, virtual
+        return self._acquire(key), virtual
+
+    def check_consistent(self) -> bool:
+        """The accounting invariant: all four maps key-identical."""
+        keys = set(self._store)
+        return (keys == set(self._refcount) == set(self._bytes)
+                == set(self._last_used))
 
 
 def _tree_bytes(tree: Any) -> int:

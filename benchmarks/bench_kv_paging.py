@@ -1,16 +1,23 @@
 """Paged vs contiguous KV layout — admission capacity at equal cache bytes,
-decode throughput overhead of the block-table indirection, and the
-kv_restore recovery decision.
+decode throughput overhead of the block-table indirection, demand-paged
+(lazy) vs upfront block allocation, and the kv_restore recovery decision.
 
 The contiguous layout pins ``max_len`` KV rows per slot, so a mixed-length
 workload admits at most ``max_batch`` requests no matter how short they
 are. The paged layout spends the SAME cache bytes on a shared block pool
 and admits until the pool (not the slot count) is exhausted — the memory
 lever that lets heterogeneous stages run the large batches the roofline
-estimator assumes. check_smoke.py enforces:
+estimator assumes. Demand paging stacks on top: admission books worst-case
+need only as a LEDGER reservation (overcommittable) and allocates blocks
+as decode actually writes them, so generation headroom stops stranding
+pool capacity. check_smoke.py enforces:
 
   * paged admits >= 1.5x the concurrent mixed-length requests of contig at
     equal cache bytes;
+  * lazy (demand-paged, overcommitted ledger) admits >= 1.2x the
+    concurrent mixed-length requests of upfront reservation at equal pool
+    bytes, with byte-identical greedy outputs across the grow and
+    preempt/re-admit paths;
   * paged decode tok/s >= 0.8x contig at the same batch (the block-table
     gather must not cost more than 20%);
   * recovery ``decide()`` picks kv_restore over recompute when the store
@@ -35,14 +42,16 @@ MAX_LEN = 64
 BLOCK = 8
 EQ_BATCH = 8            # contig slots; paged gets the same bytes instead
 MAX_NEW = 4
+MAX_NEW_LAZY = 24       # generation headroom upfront reservation strands
+LAZY_OVERCOMMIT = 2.0
 
 
-def _workload(cfg, n: int, seed: int):
+def _workload(cfg, n: int, seed: int, max_new: int = MAX_NEW):
     rng = np.random.RandomState(seed)
     lens = rng.randint(4, 29, size=n)
     return [ServeRequest(
         prompt=rng.randint(0, cfg.vocab, size=int(ln)).tolist(),
-        max_new_tokens=MAX_NEW) for ln in lens]
+        max_new_tokens=max_new) for ln in lens]
 
 
 def _throughput(cfg, params, layout: str) -> Dict:
@@ -83,6 +92,48 @@ def _capacity(cfg, params) -> Dict:
             "blocks_in_use": stats["blocks_in_use"]}
 
 
+def _lazy_ab(cfg, params) -> Dict:
+    """Demand-paged vs upfront allocation at EQUAL pool bytes: upfront
+    books worst-case ``ceil((ctx + max_new)/block)`` blocks at admission;
+    lazy books the same worst case only in the (overcommitted) ledger and
+    allocates prefill blocks, growing on demand and preempting through the
+    KV-export path when the pool runs dry. Outputs must stay byte-identical
+    either way."""
+    pool_tokens = EQ_BATCH * MAX_LEN
+    n_blocks = pool_tokens // BLOCK + 1           # +1 trash block
+    out: Dict = {}
+    results: Dict[str, Dict[int, list]] = {}
+    for mode, oc in (("upfront", 1.0), ("lazy", LAZY_OVERCOMMIT)):
+        eng = Engine(cfg, params, max_batch=48, max_len=MAX_LEN,
+                     kv_layout="paged", block_size=BLOCK, n_blocks=n_blocks,
+                     kv_alloc=mode, kv_overcommit=oc)
+        reqs = _workload(cfg, 48, seed=11, max_new=MAX_NEW_LAZY)
+        admitted = eng.admit_many(reqs)
+        concurrent = len(admitted)
+        taken = {id(r) for r in admitted}
+        queue = [r for r in reqs if id(r) not in taken]
+        rounds = 0
+        while (queue or eng.active() or eng._pending
+               or eng._preempted) and rounds < 10_000:
+            eng.step()
+            if queue:
+                adm = eng.admit_many(queue)
+                taken = {id(r) for r in adm}
+                queue = [r for r in queue if id(r) not in taken]
+            rounds += 1
+        assert all(r.done for r in reqs), f"{mode}: drain did not finish"
+        assert eng.bm.check_no_leak()
+        results[mode] = {i: list(r.generated) for i, r in enumerate(reqs)}
+        out[mode] = {"concurrent": concurrent,
+                     "preemptions": eng.stats.preemptions,
+                     "block_grows": eng.stats.block_grows,
+                     "peak_blocks": eng.bm.peak_blocks}
+    out["ratio"] = out["lazy"]["concurrent"] \
+        / max(out["upfront"]["concurrent"], 1)
+    out["identical"] = results["lazy"] == results["upfront"]
+    return out
+
+
 def _recovery_decision() -> Dict:
     """decide() must pick kv_restore over (chunked) recompute when the
     tensor store holds the interrupted request's blocks."""
@@ -121,6 +172,15 @@ def run(rows: Rows) -> Dict:
              f"paged={cap['paged_admitted']} ratio={cap['ratio']:.2f}x "
              f"frag_tokens={cap['frag_tokens']} "
              f"alloc_failures={cap['alloc_failures']}")
+    lazy = _lazy_ab(cfg, params)
+    out["lazy_ab"] = lazy
+    rows.add("kv_paging/lazy_capacity", 0.0,
+             f"upfront={lazy['upfront']['concurrent']} "
+             f"lazy={lazy['lazy']['concurrent']} "
+             f"ratio={lazy['ratio']:.2f}x "
+             f"preemptions={lazy['lazy']['preemptions']} "
+             f"grows={lazy['lazy']['block_grows']} "
+             f"identical={1 if lazy['identical'] else 0}")
     dec = _recovery_decision()
     out["recovery"] = dec
     rows.add("kv_paging/recovery_decide", 0.0,

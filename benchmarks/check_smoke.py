@@ -12,7 +12,11 @@ Enforced floors:
   * paged KV layout admits >= 1.5x the concurrent mixed-length requests of
     contig at equal cache bytes, paged decode tok/s within 20% of contig,
     and recovery decide() picks kv_restore when the store holds the blocks
-    (protects the paged-KV refactor, bench_kv_paging.py).
+    (protects the paged-KV refactor, bench_kv_paging.py);
+  * demand-paged (lazy) allocation admits >= 1.2x the concurrent
+    mixed-length requests of upfront reservation at equal pool bytes, with
+    byte-identical greedy outputs across the grow and preempt/re-admit
+    paths (protects the reservation-ledger refactor).
 """
 
 from __future__ import annotations
@@ -25,6 +29,7 @@ SEARCH_BUDGET_S = 10.0        # k<=3 paper-cluster search (PR-1 quoted 3.2s)
 SEARCH_BUDGET_K8_S = 40.0     # k=8 stress row (seed took > 80s)
 MIN_ADMIT_SPEEDUP = 5.0
 MIN_PAGED_CAPACITY_RATIO = 1.5
+MIN_LAZY_CAPACITY_RATIO = 1.2         # lazy vs upfront at equal pool bytes
 MAX_PAGED_DECODE_REGRESSION = 0.20    # paged tok/s >= 0.8x contig
 
 
@@ -95,6 +100,19 @@ def check_kv_paging(rows: List[Tuple[str, float, str]]) -> List[str]:
             failures.append(
                 f"paged admission capacity {ratio}x < "
                 f"{MIN_PAGED_CAPACITY_RATIO}x contig floor")
+    lazy = [d for n, _, d in rows if n == "kv_paging/lazy_capacity"]
+    if not lazy:
+        failures.append("no kv_paging/lazy_capacity row found")
+    else:
+        vals = derived_floats(lazy[0])
+        if vals.get("ratio", 0.0) < MIN_LAZY_CAPACITY_RATIO:
+            failures.append(
+                f"lazy admission capacity {vals.get('ratio')}x < "
+                f"{MIN_LAZY_CAPACITY_RATIO}x upfront floor")
+        if vals.get("identical", 0.0) != 1.0:
+            failures.append(
+                "lazy greedy outputs diverged from upfront across "
+                f"grow/preempt paths: {lazy[0]}")
     tok = {}
     for layout in ("contig", "paged"):
         d = [d for n, _, d in rows if n == f"kv_paging/{layout}/decode"]

@@ -104,6 +104,19 @@ def kv_restore_seconds(spec: ModelSpec, ctx: int,
     return KV_RESTORE_SETUP_S + kv_bytes_for_ctx(spec, ctx) / store_bw_bps
 
 
+def preemption_seconds(spec: ModelSpec, ctx: int,
+                       store_bw_bps: float = KV_RESTORE_BW_BPS) -> float:
+    """Cost of a KV-pool preemption round trip: a demand-paged engine that
+    overcommitted its block pool evicts a victim mid-decode, publishing its
+    blocks to the node-local store and re-attaching them on re-admission —
+    a SELF-INFLICTED kv_restore that also pays the export write (same
+    store bandwidth both ways, no grace constraint, no network). Spot
+    interruptions hide the publish inside the grace window; a preemption
+    has no such window, so both copies land on the serving timeline."""
+    return (KV_RESTORE_SETUP_S
+            + 2.0 * kv_bytes_for_ctx(spec, ctx) / store_bw_bps)
+
+
 def decide(spec: ModelSpec, placement: Placement, ctx: int,
            remaining_grace_s: float, policy: str = "hybrid",
            efficiency: float = 1.0, chunk: int = 0,

@@ -53,6 +53,12 @@ class FTConfig:
     # recovery.decide's kv_restore branch — re-admission attaches blocks
     # instead of recomputing the context
     kv_store_migration: bool = False
+    # per-pipeline KV block-pool capacity in TOKENS (0 = unbounded). Models
+    # the demand-paged engine's overcommitted pool: when the live contexts
+    # outgrow it mid-decode, the fewest-generated request is preempted to
+    # the node-local store and re-admission is priced like a SELF-INFLICTED
+    # kv_restore (recovery.preemption_seconds) instead of a re-prefill
+    kv_pool_tokens: int = 0
 
 
 @dataclasses.dataclass
@@ -65,6 +71,8 @@ class ReqState:
     migrations: int = 0
     # KV arrived via transfer or store restore: no re-prefill on re-admit
     transfer_recovered: bool = False
+    # evicted by pool pressure: re-admit pays the preemption round trip
+    kv_preempted: bool = False
 
 
 class SimPipeline:
@@ -126,6 +134,7 @@ class SimResult:
     cost_usd: float
     downtime_s: Dict[int, float]
     interruptions: int
+    kv_preemptions: int = 0
 
     @property
     def rps(self) -> float:
@@ -187,6 +196,7 @@ class ClusterSim:
         self._rr = 0.0
         self._rr_credit = [0.0] * len(self.pipes)
         self.interruptions = 0
+        self.kv_preemptions = 0
         self.downtime: Dict[int, float] = defaultdict(float)
         self.extra_cost = 0.0
         self._od_fallbacks: List[Tuple[float, str]] = []
@@ -231,6 +241,10 @@ class ClusterSim:
         self.downtime[pipe.pid] += down_end - down_start
         # at grace end the old engine dies: migrate or restart in-flight work
         for r in list(pipe.active) + list(pipe.queue):
+            # a pool-preempted payload lived in the dying node's local
+            # store: it does not survive the interruption, so re-admission
+            # must be priced by the recovery policy, not as a restore
+            r.kv_preempted = False
             if not self.ft.request_migration:
                 r.generated = 0
                 r.first_token_s = -1.0
@@ -350,27 +364,71 @@ class ClusterSim:
             unfinished.extend(p.queue)
         cost = self._total_cost(duration_s)
         return SimResult(completed, unfinished, duration_s, cost,
-                         dict(self.downtime), self.interruptions)
+                         dict(self.downtime), self.interruptions,
+                         self.kv_preemptions)
+
+    def _kv_preempt(self, p: SimPipeline, live_tok: int) -> int:
+        """Demand-paged pool pressure: this iteration writes one token per
+        active request, so the pool must cover live_tok + batch. Preempt
+        fewest-generated victims (the engine's policy) to the queue front
+        until the batch fits; returns the updated live token count."""
+        pool = self.ft.kv_pool_tokens
+        while p.active and live_tok + len(p.active) > pool:
+            victim = min(p.active,
+                         key=lambda r: (r.generated, r.req.arrival_s))
+            p.active.remove(victim)
+            live_tok -= victim.req.s_in + victim.generated
+            victim.kv_preempted = True
+            victim.admit_s = -1.0
+            p.queue.insert(0, victim)
+            self.kv_preemptions += 1
+        return live_tok
 
     def _pipeline_iteration(self, p: SimPipeline, t: float,
                             completed: List[ReqState]) -> float:
         """Admit + one decode iteration; returns elapsed time (0 = idle)."""
         dt = 0.0
-        # admit newcomers up to b_max
+        pool = self.ft.kv_pool_tokens
+        live_tok = sum(r.req.s_in + r.generated for r in p.active) \
+            if pool else 0
+        if pool:
+            live_tok = self._kv_preempt(p, live_tok)
+        # admit newcomers up to b_max (and, pool-bounded, up to capacity —
+        # an empty pipeline always admits one so a request larger than the
+        # pool still makes progress via the preempt/grow cycle)
         new = []
         while p.queue and len(p.active) + len(new) < p.b_max:
+            need = p.queue[0].req.s_in + p.queue[0].generated + 1
+            if pool and (p.active or new) and live_tok + need > pool:
+                break
             new.append(p.queue.pop(0))
+            live_tok += need
         if new:
             # transfer-recovered requests carry their KV with them (moved
-            # during the downtime window) — only the rest pay recompute
-            recompute = [r for r in new if not r.transfer_recovered]
+            # during the downtime window); pool-preempted ones re-attach
+            # from the node-local store at the preemption round-trip price
+            # — only the rest pay recompute
+            recompute = [r for r in new
+                         if not r.transfer_recovered and not r.kv_preempted]
             if recompute:
                 ctx = int(sum(r.req.s_in + r.generated for r in recompute)
                           / len(recompute))
                 dt += p.t_prefill(len(recompute), ctx)
+            restored = [r for r in new if r.kv_preempted]
+            if restored:
+                from repro.cluster.recovery import preemption_seconds
+                dt += sum(preemption_seconds(self.spec,
+                                             r.req.s_in + r.generated)
+                          for r in restored)
             for r in new:
                 r.admit_s = t
                 r.transfer_recovered = False
+                if r.kv_preempted:
+                    # re-attach resumes decode exactly where the preempt
+                    # parked it: no token is emitted at admission
+                    r.kv_preempted = False
+                    p.active.append(r)
+                    continue
                 if r.first_token_s < 0:
                     r.first_token_s = t + dt      # first new token emitted
                 r.generated += 1                   # prefill emits one token

@@ -6,15 +6,34 @@ admission throughput and trace stability:
 * **Paged block-KV cache** (``kv_layout="paged"``, the default for
   attention families) — the KV lives in a pool of fixed-size token blocks
   shared by every slot, with a per-slot block table mapping virtual
-  positions to pool blocks (``serving/kv_blocks.py``). Admission reserves
-  ``ceil(total_ctx / block_size)`` blocks per request and frees them on
-  finish, so memory scales with *actual* context lengths instead of
-  ``max_batch * max_len`` — the lever that lets mixed-length workloads run
-  the large batches the roofline estimator assumes. When the pool can't
-  cover a request the engine refuses admission (``EngineStats.
-  alloc_failures`` — backpressure, not OOM). ``kv_layout="contig"`` keeps
-  the dense slot-row layout (required for SSM/MoE/enc-dec, and the A/B
-  baseline for benchmarks/bench_kv_paging.py).
+  positions to pool blocks (``serving/kv_blocks.py``), so memory scales
+  with *actual* context lengths instead of ``max_batch * max_len`` — the
+  lever that lets mixed-length workloads run the large batches the
+  roofline estimator assumes. When the pool can't cover a request the
+  engine refuses admission (``EngineStats.alloc_failures`` — backpressure,
+  not OOM), skipping ahead a bounded window so one oversized request
+  can't starve fit-able smaller ones behind it. ``kv_layout="contig"``
+  keeps the dense slot-row layout (required for SSM/MoE/enc-dec, and the
+  A/B baseline for benchmarks/bench_kv_paging.py).
+* **Demand-paged block allocation** (``kv_alloc="lazy"``, the default) —
+  admission books a request's worst-case ``ceil(total_ctx / block_size)``
+  blocks as a *reservation* in the block manager's ledger (admission
+  control stays sound) but allocates only the blocks covering the prefill
+  context; ``step()`` grows a slot by one block when decode crosses a
+  block boundary (``EngineStats.block_grows``). With ``kv_overcommit > 1``
+  the ledger books more reserved blocks than physically exist, betting
+  that EOS-early requests free capacity before everyone reaches worst
+  case; when a grow then finds the free list dry, the engine PREEMPTS a
+  victim slot (fewest generated tokens): its live KV blocks are exported
+  (position-exact, the §5.1 invariant), its blocks freed, and the request
+  parked on ``take_preempted()`` for KV-attach re-admission — the global
+  server publishes the payload to the shared tensor store and requeues;
+  a standalone engine re-attaches it itself once capacity frees. Greedy
+  outputs stay byte-identical across grow and preempt/re-admit paths.
+  ``kv_alloc="upfront"`` keeps whole-request allocation at admission (a
+  lazily-admitted pool can never preempt under ``kv_overcommit=1.0``
+  either: reservations never exceed physical blocks, so every grow is
+  covered).
 * **Block-granular KV migration** — ``export_kv``/``import_kv`` round-trip
   a live request's blocks through the shared tensor store, so a migrated
   request re-attaches its KV instead of recomputing it (§5.1 upgraded via
@@ -92,6 +111,8 @@ class EngineStats:
     retraces: int = 0           # total jit traces (prefill+decode+scatter)
     prefill_retraces: int = 0   # prefill traces — bounded by bucket count
     alloc_failures: int = 0     # paged admissions refused (backpressure)
+    block_grows: int = 0        # blocks allocated on demand mid-decode
+    preemptions: int = 0        # slots evicted when a grow found a dry pool
     kv_exports: int = 0         # KV block sets published for migration
     kv_imports: int = 0         # re-admissions that attached KV (no prefill)
 
@@ -120,9 +141,12 @@ class Engine:
                  use_pallas: bool = False, prefill_group: int = 4,
                  prefill_bucket: int = 16, prefill_chunk: int = 0,
                  admission: str = "bucketed", kv_layout: str = "auto",
-                 block_size: int = 16, n_blocks: int = 0):
+                 block_size: int = 16, n_blocks: int = 0,
+                 kv_alloc: str = "lazy", kv_overcommit: float = 1.0,
+                 admit_window: int = 4):
         assert admission in ("bucketed", "legacy"), admission
         assert kv_layout in ("auto", "paged", "contig"), kv_layout
+        assert kv_alloc in ("lazy", "upfront"), kv_alloc
         _silence_cpu_donation_warnings()
         self.cfg = cfg
         model_kw = dict(model_kw or {})
@@ -156,6 +180,9 @@ class Engine:
                 f"kv_layout='paged' unsupported for {cfg.name} "
                 f"(family={cfg.family}, admission={admission})")
         self.kv_layout = kv_layout
+        self.kv_alloc = kv_alloc
+        self._lazy = kv_alloc == "lazy" and kv_layout == "paged"
+        self._admit_window = max(0, int(admit_window))
         self.bm: Optional[BlockManager] = None
         self._tbl_dirty = False
         self.enc_frames = 8           # stubbed frontend frame count
@@ -163,7 +190,8 @@ class Engine:
             mb = -(-max_len // block_size)
             if n_blocks <= 0:
                 n_blocks = max_batch * mb + 1     # capacity-parity + trash
-            self.bm = BlockManager(n_blocks, block_size, max_batch, mb)
+            self.bm = BlockManager(n_blocks, block_size, max_batch, mb,
+                                   overcommit=kv_overcommit)
             self.cache = self.model.init_cache(
                 max_batch, max_len, vector_pos=True, kv_layout="paged",
                 n_blocks=n_blocks, block_size=block_size)
@@ -178,6 +206,10 @@ class Engine:
         self.stats = EngineStats()
         self._pending: List[_PendingGroup] = []
         self._admit_finished: List[ServeRequest] = []
+        # requests evicted by a dry-pool grow, with their exported KV
+        # payloads; drained by the global server (publish + requeue) or
+        # re-attached internally once capacity frees (standalone use)
+        self._preempted: List[Tuple[ServeRequest, Dict]] = []
         self._legacy_shapes: set = set()
 
         def prefill_fn(params, tokens, last_pos):
@@ -327,10 +359,13 @@ class Engine:
             return {}
         return {"blocks_in_use": self.bm.blocks_in_use(),
                 "blocks_free": self.bm.blocks_free(),
+                "reserved_blocks": self.bm.reserved_blocks(),
                 "frag_tokens": self.bm.frag_tokens(),
                 "peak_blocks": self.bm.peak_blocks,
                 "block_size": self.bm.block_size,
                 "n_blocks": self.bm.n_blocks,
+                "block_grows": self.stats.block_grows,
+                "preemptions": self.stats.preemptions,
                 "alloc_failures": self.stats.alloc_failures}
 
     # -- admission --------------------------------------------------------------
@@ -339,31 +374,48 @@ class Engine:
 
     def admit_many(self, reqs: Sequence[ServeRequest]
                    ) -> List[ServeRequest]:
-        """Admit a prefix of ``reqs`` bounded by free slots and (paged)
-        free KV blocks.
+        """Admit from ``reqs`` in order, bounded by free slots and (paged)
+        the block manager's reservation ledger.
+
+        Lazy mode books each request's worst-case blocks in the ledger but
+        allocates only the prefill-context blocks (``step()`` grows on
+        demand). A request the pool can't cover is SKIPPED rather than
+        blocking the whole queue — admission keeps scanning up to
+        ``admit_window`` failures so fit-able smaller requests behind an
+        oversized one still drain (approximate FIFO). The returned list is
+        therefore NOT necessarily a prefix of ``reqs``; callers must
+        remove admitted requests from their queues by identity.
 
         Requests are grouped by length bucket and prefilled in batches of
         ``prefill_group``; long contexts go to the chunked path (grouped
-        into one dispatch per step). Returns the admitted requests
-        (finished ones surface via ``step()``)."""
+        into one dispatch per step). Finished ones surface via ``step()``."""
         free = self.free_slots()
         admitted: List[ServeRequest] = []
+        skipped = 0
         groups: Dict[int, List[Tuple[ServeRequest, List[int], int]]] = {}
         chunked: List[Tuple[ServeRequest, List[int], int]] = []
-        for r in reqs:               # strict prefix; done reqs need no slot
-            if r.done:               # nothing to generate: pass through
+        for r in reqs:               # done reqs need no slot: pass through
+            if r.done:
                 self._admit_finished.append(r)
                 admitted.append(r)
                 continue
             if not free:
-                break
+                break                # no slot for anyone: skipping can't help
             assert self._total_tokens(r) <= self.max_len, \
                 "context exceeds engine max_len"
             slot = free[0]
             if self.bm is not None:
-                if not self.bm.alloc(slot, self._total_tokens(r)):
+                # prefill length without materializing the token list (it
+                # is only built once the reservation succeeds)
+                ctx = r.ctx_len - (1 if r.generated else 0)
+                live = ctx if self._lazy else None
+                if not self.bm.reserve(slot, self._total_tokens(r), live):
                     self.stats.alloc_failures += 1
-                    break            # backpressure: leave r (and rest) queued
+                    skipped += 1
+                    if skipped >= self._admit_window:
+                        break        # backpressure: leave the rest queued
+                    continue         # skip ahead: smaller reqs may still fit
+                self.bm.note_live(slot, ctx)         # true-frag accounting
                 self._tbl_dirty = True
             free.pop(0)
             toks = self._prefill_tokens(r)
@@ -523,10 +575,62 @@ class Engine:
             self.slots[m.slot] = None     # _install re-marks the slot
             self._install(m.req, m.slot, first[j])
 
+    # -- decode-time grow / preemption ------------------------------------------
+    def _pick_victim(self, candidates: List[int]) -> Optional[int]:
+        """Preemption victim: the live slot with the fewest generated
+        tokens (least progress to park; its whole KV round-trips through
+        the store anyway). Deterministic tie-break on slot index."""
+        owned = [i for i in candidates if self.slots[i] is not None]
+        if not owned:
+            return None
+        return min(owned, key=lambda i: (len(self.slots[i].generated), i))
+
+    def _preempt(self, slot: int) -> None:
+        """Evict a live slot to make room: export its KV (position-exact,
+        so re-admission can attach byte-identically), free its blocks, and
+        park (request, payload) for the server to publish + requeue."""
+        req = self.slots[slot]
+        payload = self.export_kv(slot)
+        self.slots[slot] = None
+        self.bm.free(slot)
+        self._tbl_dirty = True
+        self.stats.preemptions += 1
+        self._preempted.append((req, payload))
+
+    def _ensure_grow(self, live: List[int]) -> List[int]:
+        """Demand paging's decode-side half: every slot decoding this step
+        writes token ``pos``, so its block table must cover ``pos + 1``
+        tokens — which is the request's ``ctx_len`` (§5.1 invariant:
+        everything but the last generated token is in the cache), so no
+        device sync is needed. Grow crossing slots by a block; when the
+        free list is dry, preempt victims until the grow fits (preempting
+        the grower itself ends its grow — it re-attaches later). Returns
+        the slots that still decode this step."""
+        grows0 = self.bm.grows
+        alive = list(live)
+        for slot in list(live):
+            if self.slots[slot] is None:        # preempted by an earlier grow
+                continue
+            while not self.bm.grow(slot, self.slots[slot].ctx_len):
+                victim = self._pick_victim(alive)
+                assert victim is not None, "grow failed with no live victim"
+                self._preempt(victim)
+                alive.remove(victim)
+                if victim == slot:
+                    break
+        if self.bm.grows > grows0:
+            self.stats.block_grows += self.bm.grows - grows0
+            self._tbl_dirty = True
+        return [i for i in alive if self.slots[i] is not None]
+
     # -- decode -----------------------------------------------------------------
     def step(self) -> List[ServeRequest]:
-        """One scheduling iteration: advance chunked prefills, then decode
-        one token for every live slot; returns finished requests."""
+        """One scheduling iteration: re-attach preempted requests capacity
+        now allows, advance chunked prefills, grow block tables crossing a
+        block boundary (preempting victims when the pool is dry), then
+        decode one token for every live slot; returns finished requests."""
+        if self._preempted:
+            self._readmit_preempted()
         if self._pending:
             self._advance_pending()
         finished = list(self._admit_finished)
@@ -536,6 +640,10 @@ class Engine:
                 if s is not None and i not in pending]
         if not live:
             return finished
+        if self._lazy:           # upfront allocations can never need a grow
+            live = self._ensure_grow(live)
+            if not live:
+                return finished
         tokens = np.zeros((self.max_batch, 1), np.int32)
         mask = np.zeros((self.max_batch,), bool)
         for i in live:
@@ -550,6 +658,9 @@ class Engine:
             req = self.slots[i]
             req.generated.append(int(nxt[i]))
             self.stats.tokens_out += 1
+            if self.bm is not None:
+                # tokens in the cache == ctx_len - 1 (§5.1 invariant)
+                self.bm.note_live(i, req.ctx_len - 1)
             if req.done:
                 finished.append(req)
                 self.slots[i] = None
@@ -557,21 +668,42 @@ class Engine:
         self.stats.decode_steps += 1
         return finished
 
+    def _readmit_preempted(self) -> None:
+        """Re-attach parked preempted requests whose blocks now fit
+        (standalone operation; the global server normally drains
+        ``take_preempted`` every round before this can fire)."""
+        still: List[Tuple[ServeRequest, Dict]] = []
+        for req, payload in self._preempted:
+            if not self.import_kv(req, payload):
+                still.append((req, payload))
+        self._preempted = still
+
+    def take_preempted(self) -> List[Tuple[ServeRequest, Dict]]:
+        """Drain (request, KV payload) pairs evicted by dry-pool grows —
+        the global server publishes the payloads to the tensor store and
+        requeues the requests for KV-attach re-admission."""
+        out, self._preempted = self._preempted, []
+        return out
+
     def drain(self) -> List[ServeRequest]:
         """Run until every admitted request finishes."""
         out = []
-        while self.active() or self._pending or self._admit_finished:
+        while (self.active() or self._pending or self._admit_finished
+               or self._preempted):
             out.extend(self.step())
         return out
 
     def evict_all(self) -> List[ServeRequest]:
         """Simulated engine death: return in-flight requests (their
-        ``generated`` lists are the preserved output — paper §5.1)."""
+        ``generated`` lists are the preserved output — paper §5.1),
+        including preempted ones still parked for re-admission."""
         reqs = [s for s in self.slots if s is not None]
+        reqs += [r for r, _ in self._preempted]
         reqs += [r for r in self._admit_finished if r not in reqs]
         self.slots = [None] * self.max_batch
         self._pending = []
         self._admit_finished = []
+        self._preempted = []
         if self.bm is not None:
             self.bm.free_all()
             self._tbl_dirty = True
@@ -623,9 +755,12 @@ class Engine:
         if not free or self._total_tokens(req) > self.max_len:
             return False
         slot = free[0]
-        if not self.bm.alloc(slot, self._total_tokens(req)):
-            self.stats.alloc_failures += 1
-            return False
+        # lazy: allocate only the blocks the payload fills (the ledger
+        # books the worst case); the rest arrive via decode-time grow
+        live = payload["pos"] if self._lazy else None
+        if not self.bm.reserve(slot, self._total_tokens(req), live):
+            return False             # no capacity yet: caller retries later
+        self.bm.note_live(slot, payload["pos"])
         self._tbl_dirty = True
         nb = payload["k"].shape[1]
         ids = jnp.asarray(self.bm.table[slot, :nb].copy())

@@ -15,11 +15,26 @@ without data-dependent shapes, and gathers through an unallocated entry read
 garbage that position masking already hides. Real allocations hand out ids
 from [1, n_blocks).
 
-Allocation is whole-request up front (``ceil(total_tokens / block_size)``
-blocks at admission, freed on finish/eviction): a request admitted can never
-hit an out-of-blocks condition mid-decode, so backpressure lives entirely at
-admission (``Engine`` counts the rejections in ``EngineStats.alloc_failures``
-and leaves the request queued instead of OOM-ing the pool).
+Allocation is DEMAND-PAGED through a reservation ledger. Admission books a
+request's worst-case token need (``ceil(total_tokens / block_size)`` blocks)
+as a *reservation* — so admission control stays sound — but only allocates
+blocks covering the tokens it will write now (the prefill context);
+``grow`` allocates the next block when decode crosses a block boundary.
+The ledger may overcommit the pool (``overcommit`` > 1 books more reserved
+blocks than physically exist), betting that EOS-early requests release
+capacity before everyone reaches worst case; when the bet loses and a grow
+finds the free list dry, the engine preempts a victim slot (its KV blocks
+round-trip through the shared tensor store — see serving/engine.py).
+A single request's worst case must always fit the pool physically, so a
+slot that is alone can never wedge on its own reservation.
+
+``reserve(slot, n, live_tokens=None)`` with the default ``live_tokens``
+allocates everything up front — the pre-ledger behavior, kept as the
+``kv_alloc="upfront"`` A/B baseline (``alloc`` is its alias).
+
+``note_live`` records tokens actually written so ``frag_tokens`` reports
+TRUE internal fragmentation (allocated capacity minus live occupancy), not
+the smaller waste-vs-lifetime-reservation number.
 """
 
 from __future__ import annotations
@@ -33,51 +48,115 @@ TRASH_BLOCK = 0
 
 class BlockManager:
     def __init__(self, n_blocks: int, block_size: int, max_slots: int,
-                 max_blocks_per_slot: int):
+                 max_blocks_per_slot: int, overcommit: float = 1.0):
         assert n_blocks >= 2, "need at least the trash block plus one"
         assert block_size >= 1
+        assert overcommit >= 1.0, "overcommit < 1 would idle physical blocks"
         self.n_blocks = n_blocks
         self.block_size = block_size
         self.max_blocks_per_slot = max_blocks_per_slot
+        self.overcommit = float(overcommit)
         # LIFO free list keeps recently-freed (cache-warm) blocks hot
         self._free: List[int] = list(range(n_blocks - 1, TRASH_BLOCK, -1))
         # per-slot block table; row width = blocks needed for max_len
         self.table = np.full((max_slots, max_blocks_per_slot), TRASH_BLOCK,
                              np.int32)
         self._owned: Dict[int, List[int]] = {}
-        self._tokens: Dict[int, int] = {}     # requested tokens per slot
+        self._reserved: Dict[int, int] = {}   # ledger: worst-case blocks
+        self._tokens: Dict[int, int] = {}     # requested lifetime tokens
+        self._live: Dict[int, int] = {}       # tokens actually written
         self.peak_blocks = 0
+        self.grows = 0                        # decode-time block allocations
 
     # -- sizing -----------------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.block_size)
 
-    def can_alloc(self, n_tokens: int) -> bool:
-        need = self.blocks_for(n_tokens)
-        return need <= len(self._free) and need <= self.max_blocks_per_slot
+    def reservation_cap(self) -> int:
+        """Ledger capacity: physical blocks scaled by the overcommit bet."""
+        return int(self.overcommit * (self.n_blocks - 1))
 
-    # -- alloc / free -----------------------------------------------------------
-    def alloc(self, slot: int, n_tokens: int) -> bool:
-        """Reserve blocks covering ``n_tokens`` for ``slot``. All-or-nothing:
-        returns False when the pool can't cover the request, leaving the
-        free list untouched (the engine counts rejections in
-        ``EngineStats.alloc_failures``)."""
+    def reserved_blocks(self) -> int:
+        return sum(self._reserved.values())
+
+    def can_reserve(self, n_tokens: int, live_tokens: int = None) -> bool:
+        live = n_tokens if live_tokens is None else min(live_tokens, n_tokens)
+        need_res = self.blocks_for(n_tokens)
+        return (need_res <= self.max_blocks_per_slot
+                # worst case must fit the pool physically: a slot running
+                # alone must be able to grow to its reservation, or
+                # preemption could thrash without ever making room
+                and need_res <= self.n_blocks - 1
+                and self.reserved_blocks() + need_res
+                <= self.reservation_cap()
+                and self.blocks_for(live) <= len(self._free))
+
+    def can_alloc(self, n_tokens: int) -> bool:
+        return self.can_reserve(n_tokens)
+
+    # -- reserve / grow / free --------------------------------------------------
+    def reserve(self, slot: int, n_tokens: int,
+                live_tokens: int = None) -> bool:
+        """Book ``slot``'s worst-case ``n_tokens`` in the ledger and
+        allocate only the blocks covering ``live_tokens`` (demand paging;
+        default = everything up front). All-or-nothing: returns False
+        leaving ledger and free list untouched when the reservation or the
+        immediate allocation can't be covered."""
         assert slot not in self._owned, f"slot {slot} already allocated"
-        if not self.can_alloc(n_tokens):
+        live = n_tokens if live_tokens is None else min(live_tokens, n_tokens)
+        if not self.can_reserve(n_tokens, live):
             return False
-        need = self.blocks_for(n_tokens)
+        need = self.blocks_for(live)
         ids = [self._free.pop() for _ in range(need)]
         self._owned[slot] = ids
+        self._reserved[slot] = self.blocks_for(n_tokens)
         self._tokens[slot] = n_tokens
+        self._live[slot] = live
         self.table[slot, :need] = ids
         self.table[slot, need:] = TRASH_BLOCK
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
         return True
 
+    def alloc(self, slot: int, n_tokens: int) -> bool:
+        """Whole-request upfront allocation (the pre-ledger behavior, kept
+        as the ``kv_alloc='upfront'`` baseline)."""
+        return self.reserve(slot, n_tokens)
+
+    def grow(self, slot: int, n_tokens: int) -> bool:
+        """Ensure ``slot``'s allocation covers ``n_tokens``, allocating the
+        missing blocks (decode crossed a block boundary). True when the
+        capacity already suffices; False when the free list can't cover it
+        (the caller preempts a victim and retries)."""
+        ids = self._owned.get(slot)
+        assert ids is not None, f"grow on unallocated slot {slot}"
+        need = self.blocks_for(n_tokens)
+        assert need <= self._reserved[slot], \
+            f"slot {slot} growing past its reservation"
+        extra = need - len(ids)
+        if extra <= 0:
+            return True
+        if extra > len(self._free):
+            return False
+        base = len(ids)
+        new = [self._free.pop() for _ in range(extra)]
+        ids.extend(new)
+        self.table[slot, base:base + extra] = new
+        self.grows += extra
+        self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
+        return True
+
+    def note_live(self, slot: int, n_tokens: int) -> None:
+        """Record tokens actually written to ``slot`` (frag accounting)."""
+        if slot in self._owned:
+            self._live[slot] = n_tokens
+
     def free(self, slot: int) -> int:
-        """Return ``slot``'s blocks to the pool; zero its table row."""
+        """Return ``slot``'s blocks to the pool, release its reservation,
+        zero its table row."""
         ids = self._owned.pop(slot, [])
+        self._reserved.pop(slot, None)
         self._tokens.pop(slot, None)
+        self._live.pop(slot, None)
         self._free.extend(reversed(ids))
         self.table[slot, :] = TRASH_BLOCK
         return len(ids)
@@ -96,15 +175,28 @@ class BlockManager:
     def blocks_free(self) -> int:
         return len(self._free)
 
+    def live_tokens(self, slot: int) -> int:
+        return self._live.get(slot, 0)
+
     def frag_tokens(self) -> int:
-        """Internal fragmentation: allocated token capacity beyond what the
-        owning requests asked for (the tail of each slot's last block)."""
-        return sum(len(ids) * self.block_size - self._tokens[s]
+        """TRUE internal fragmentation: allocated token capacity beyond
+        what the owning requests have actually written (live occupancy,
+        not the lifetime reservation — mid-flight waste counts)."""
+        return sum(len(ids) * self.block_size - self._live[s]
                    for s, ids in self._owned.items())
 
     def check_no_leak(self) -> bool:
-        """Every non-trash block is either free or owned exactly once."""
+        """Every non-trash block is either free or owned exactly once, and
+        the ledger brackets every slot's allocation:
+        live <= allocated capacity, allocated <= reserved."""
         owned = [b for ids in self._owned.values() for b in ids]
         seen = owned + self._free
-        return (len(seen) == len(set(seen)) == self.n_blocks - 1
-                and TRASH_BLOCK not in seen)
+        if not (len(seen) == len(set(seen)) == self.n_blocks - 1
+                and TRASH_BLOCK not in seen):
+            return False
+        if not (set(self._owned) == set(self._reserved)
+                == set(self._live)):
+            return False
+        return all(self._live[s] <= len(ids) * self.block_size
+                   and len(ids) <= self._reserved[s]
+                   for s, ids in self._owned.items())

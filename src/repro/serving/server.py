@@ -23,6 +23,11 @@ placement). The ``GlobalServer``:
     point-to-point transfer racing the grace period. Any incompatibility
     (contig engine, different block size, stale payload) falls back to the
     §5.1 recompute path;
+  * pool preemptions ride the SAME path: when a demand-paged engine's
+    decode-time grow finds the block pool dry (overcommitted ledger), the
+    victim's exported KV payload is published to the store — capped first
+    by the store's byte budget (``TensorStore(budget_bytes=...)``) — and
+    the request requeued at the queue front for KV-attach re-admission;
   * rebuilds the pipeline with a replacement instance: with the shared
     tensor store the new engine ATTACHES to resident weights (concurrent
     initialization, §5.2) — the rebuild overlaps serving on the other
@@ -156,6 +161,15 @@ class GlobalServer:
     def _kv_key(self, req: ServeRequest) -> str:
         return f"r{req.rid}"
 
+    def _publish_kv(self, key: str, payload: Dict) -> None:
+        """Publish one request's KV payload. Interruption grace-window and
+        pool-preemption publishes share this path; ``put`` LRU-evicts
+        unreferenced keys down to the store's ``budget_bytes`` on insert,
+        so published-KV residency stays capped (older unpinned payloads
+        go first — the fresh payload is most-recently used)."""
+        self.store.put(self._KV_MODEL, key, payload)
+        self.events.append((self.clock, "kv_publish", key))
+
     def _admit_kv_attached(self, p: ServingPipeline) -> None:
         """Admit queued requests whose KV blocks are resident in the store
         by attaching them (no recompute). Successful imports consume the
@@ -174,10 +188,29 @@ class GlobalServer:
                 rest.append(r)
         p.queue[:] = rest
 
+    def _drain_preempted(self, p: ServingPipeline) -> None:
+        """Collect requests the engine preempted when a decode-time grow
+        found the pool dry: publish their KV payloads (so re-admission
+        attaches instead of recomputing — same store path the grace window
+        uses) and requeue them at the FRONT of the pipeline's queue."""
+        for req, payload in reversed(p.engine.take_preempted()):
+            self.events.append((self.clock, "preempt", f"r{req.rid}"))
+            # a victim preempted in its admission round has left the
+            # engine's live set before step()'s first-token scan runs:
+            # record TTFT here, at the round its token was emitted
+            if req.first_token_s < 0 and req.generated:
+                req.first_token_s = self.clock
+            if self.use_kv_migration and self.store is not None:
+                self._publish_kv(self._kv_key(req), payload)
+            # without a store the payload is dropped; generated tokens are
+            # preserved, so re-admission recomputes (§5.1 semantics)
+            p.queue.insert(0, req)
+
     def step(self) -> int:
         """One scheduling round: batched admission of queued requests (KV
         attach first, prefill for the rest), one decode step per alive
-        pipeline. Returns tokens emitted."""
+        pipeline, then publish + requeue any pool-preempted requests.
+        Returns tokens emitted."""
         emitted = 0
         for p in self.pipelines:
             if not p.alive:
@@ -190,8 +223,13 @@ class GlobalServer:
             if self.use_kv_migration and self.store is not None and p.queue:
                 self._admit_kv_attached(p)
             admitted = p.engine.admit_many(p.queue)
-            del p.queue[:len(admitted)]
+            if admitted:
+                # skip-ahead admission: admitted is not necessarily a
+                # queue prefix — remove by identity
+                taken = {id(r) for r in admitted}
+                p.queue[:] = [r for r in p.queue if id(r) not in taken]
             fin = p.engine.step()
+            self._drain_preempted(p)
             for r in list(p.engine.active()) + fin:
                 if r.first_token_s < 0 and r.generated:
                     r.first_token_s = self.clock
@@ -246,15 +284,18 @@ class GlobalServer:
                 continue
             self.events.append((self.clock, "interrupt",
                                 f"p{p.pid}:{instance_id}"))
+            # pool-preempted requests parked on the engine carry their own
+            # payloads; the dying pipeline must not drop them
+            parked = p.engine.take_preempted()
             # publish live KV blocks DURING the grace period (the engine is
             # still up): replacement/surviving pipelines attach instead of
             # recomputing (§5.1 x §5.2)
             if (self.use_kv_migration and self.use_migration
                     and self.store is not None):
+                for req, payload in parked:
+                    self._publish_kv(self._kv_key(req), payload)
                 for rid, payload in p.engine.export_live_kv().items():
-                    self.store.put(self._KV_MODEL, f"r{rid}", payload)
-                    self.events.append((self.clock, "kv_publish",
-                                        f"r{rid}"))
+                    self._publish_kv(f"r{rid}", payload)
             # old pipeline serves through the grace period
             grace_end = self.clock + ft.grace_period_s
             if self.use_concurrent_init and self.store is not None:
@@ -268,7 +309,8 @@ class GlobalServer:
                 ready = (max(grace_end, self.clock + ft.node_provision_s)
                          + ft.store_load_s + ft.engine_init_s)
                 p.down_until = ready
-            reqs = p.engine.evict_all() + p.queue
+            reqs = (p.engine.evict_all() + [r for r, _ in parked]
+                    + p.queue)
             p.queue = []
             for r in reqs:
                 if not self.use_migration:

@@ -105,9 +105,11 @@ class TensorStore:
     def take(self, model: str, partition: str) -> Optional[Any]:
         """Consume a key: return its params and drop it from the store
         (single-consumer payloads, e.g. a migrated request's KV blocks).
-        None when absent."""
+        None when absent — or when the key is PINNED (refcount > 0):
+        ``evict_to`` promises referenced keys stay resident, so consuming
+        one would yank a partition out from under its attached engines."""
         key = (model, partition)
-        if key not in self._store:
+        if key not in self._store or self._refcount.get(key, 0) > 0:
             return None
         params = self._store[key]
         self._drop(key)

@@ -1,0 +1,377 @@
+"""Demand-paged KV block allocation: reservation ledger, decode-time grow,
+dry-pool preemption through the tensor store, skip-ahead admission, true
+fragmentation accounting, the pinned-key ``take`` regression, the
+KV-publish byte budget, and the simulator's preemption pricing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, GlobalServer, ServeRequest, TensorStore
+from repro.serving.kv_blocks import BlockManager
+
+
+def _params_for(cfg):
+    m = build_model(cfg, remat=False, attn_chunk=0)
+    return m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    return cfg, _params_for(cfg)
+
+
+# -- block manager: ledger + grow ----------------------------------------------
+
+def test_ledger_reserve_books_worst_case_allocates_live():
+    bm = BlockManager(n_blocks=9, block_size=4, max_slots=4,
+                      max_blocks_per_slot=6, overcommit=2.0)
+    assert bm.reservation_cap() == 16
+    assert bm.reserve(0, 20, 6)                   # 5 reserved, 2 allocated
+    assert bm.reserved_blocks() == 5
+    assert bm.blocks_in_use() == 2 and bm.blocks_free() == 6
+    assert (bm.table[0, :2] > 0).all() and bm.table[0, 2] == 0
+    # grow inside allocated capacity is a no-op; crossing allocates one
+    assert bm.grow(0, 8) and bm.blocks_in_use() == 2
+    assert bm.grow(0, 9) and bm.blocks_in_use() == 3 and bm.grows == 1
+    assert bm.table[0, 2] > 0
+    assert bm.check_no_leak()
+    # free releases ledger and blocks together
+    assert bm.free(0) == 3
+    assert bm.reserved_blocks() == 0 and bm.blocks_free() == 8
+    assert bm.check_no_leak()
+
+
+def test_ledger_overcommit_and_physical_caps():
+    bm = BlockManager(n_blocks=9, block_size=4, max_slots=8,
+                      max_blocks_per_slot=8, overcommit=1.5)
+    # cap = 1.5 * 8 = 12 reserved blocks
+    assert bm.reserve(0, 16, 4)                   # 4 reserved, 1 allocated
+    assert bm.reserve(1, 16, 4)                   # 8 reserved
+    assert bm.can_reserve(16, 4)                  # 12 == cap: fits
+    assert not bm.can_reserve(20, 4)              # 13 > cap: ledger refuses
+    assert bm.reserve(2, 16, 4)
+    assert not bm.can_reserve(4)                  # cap exhausted
+    bm.free(0)
+    # a single request's worst case must fit the pool PHYSICALLY no matter
+    # the overcommit (otherwise it could thrash preempting forever)
+    wide = BlockManager(n_blocks=5, block_size=4, max_slots=2,
+                        max_blocks_per_slot=8, overcommit=4.0)
+    assert not wide.can_reserve(24)               # 6 blocks > 4 physical
+    assert wide.can_reserve(16)
+    # and grow past the booked reservation is a programming error
+    nb = BlockManager(n_blocks=9, block_size=4, max_slots=2,
+                      max_blocks_per_slot=6)
+    assert nb.reserve(0, 8, 4)
+    with pytest.raises(AssertionError):
+        nb.grow(0, 12)
+
+
+def test_grow_fails_dry_leaving_state_intact():
+    bm = BlockManager(n_blocks=4, block_size=4, max_slots=2,
+                      max_blocks_per_slot=3, overcommit=2.0)
+    assert bm.reserve(0, 12, 4)                   # 1 of 3 allocated
+    assert bm.reserve(1, 8, 8)                    # 2 allocated: pool dry
+    assert not bm.grow(0, 5)                      # free list empty
+    assert bm.blocks_in_use() == 3 and bm.check_no_leak()
+    bm.free(1)
+    assert bm.grow(0, 5)                          # retry after a free works
+    assert bm.check_no_leak()
+
+
+def test_frag_tokens_measures_live_occupancy(setup):
+    """Regression: fragmentation used to be measured against the lifetime
+    reservation, hiding the unwritten tail of in-flight requests."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, block_size=8,
+                 kv_alloc="upfront")
+    r = ServeRequest(prompt=[1, 2, 3, 4], max_new_tokens=28)
+    eng.admit(r)
+    # upfront allocated ceil(32/8)=4 blocks; only the 4 prompt tokens live
+    assert eng.block_stats()["frag_tokens"] == 4 * 8 - 4
+    eng.step()
+    assert eng.block_stats()["frag_tokens"] == 4 * 8 - 5
+    lazy = Engine(cfg, params, max_batch=2, max_len=64, block_size=8)
+    r2 = ServeRequest(prompt=[1, 2, 3, 4], max_new_tokens=28)
+    lazy.admit(r2)
+    # lazy allocated only the prefill block: frag is the block tail
+    assert lazy.block_stats()["frag_tokens"] == 8 - 4
+    assert lazy.block_stats()["reserved_blocks"] == 4
+
+
+# -- engine: lazy grow + preemption --------------------------------------------
+
+def test_lazy_matches_upfront_across_grow(setup):
+    """Greedy outputs are byte-identical between kv_alloc='lazy' and
+    'upfront'; the lazy run must actually grow (and, at overcommit 1.0,
+    never preempt — reservations cannot exceed physical blocks)."""
+    cfg, params = setup
+    outs = {}
+    for mode in ("lazy", "upfront"):
+        eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                     kv_alloc=mode)
+        rs = [ServeRequest(prompt=list(range(1, 4 + 3 * i)),
+                           max_new_tokens=12) for i in range(4)]
+        eng.admit_many(rs)
+        eng.drain()
+        outs[mode] = [list(r.generated) for r in rs]
+        assert eng.bm.check_no_leak() and eng.bm.blocks_in_use() == 0
+        if mode == "lazy":
+            assert eng.stats.block_grows >= 1
+            assert eng.stats.preemptions == 0
+        else:
+            assert eng.stats.block_grows == 0
+    assert outs["lazy"] == outs["upfront"]
+
+
+def test_preemption_roundtrip_byte_identical_standalone(setup):
+    """An overcommitted pool preempts mid-decode; the standalone engine
+    re-attaches the exported KV itself and finishes everything with the
+    exact tokens of an unconstrained run."""
+    cfg, params = setup
+
+    def gen(**kw):
+        eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                     **kw)
+        rs = [ServeRequest(prompt=list(range(1, 10 + 2 * i)),
+                           max_new_tokens=20) for i in range(3)]
+        assert len(eng.admit_many(rs)) == 3
+        eng.drain()
+        assert all(r.done for r in rs)
+        assert eng.bm.check_no_leak() and eng.bm.blocks_in_use() == 0
+        return eng, [list(r.generated) for r in rs]
+
+    _, ref = gen()
+    eng, out = gen(n_blocks=11, kv_overcommit=2.5)    # 10 physical blocks
+    assert out == ref
+    assert eng.stats.preemptions >= 1
+    assert eng.stats.kv_imports >= 1          # re-admitted via attach
+    assert eng.stats.block_grows >= 1
+
+
+def test_preemption_victim_has_fewest_generated(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                 n_blocks=8, kv_overcommit=2.0)      # 7 physical blocks
+    old = ServeRequest(prompt=list(range(1, 9)), max_new_tokens=30)
+    eng.admit(old)
+    for _ in range(6):
+        eng.step()                            # old is well ahead
+    young = ServeRequest(prompt=list(range(1, 17)), max_new_tokens=30)
+    assert eng.admit(young)
+    victims = []
+    for _ in range(40):
+        eng.step()
+        victims += [r.rid for r, _ in eng._preempted]
+        if victims:
+            break
+    assert victims and victims[0] == young.rid
+
+
+def test_ledger_churn_never_leaks(setup):
+    """Property-style: random admit/grow/preempt/finish interleavings on
+    an overcommitted pool keep the ledger leak-free at every step."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                 n_blocks=13, kv_overcommit=2.0)
+    rng = np.random.RandomState(7)
+    queue = [ServeRequest(
+        prompt=rng.randint(0, cfg.vocab, rng.randint(3, 30)).tolist(),
+        max_new_tokens=int(rng.randint(2, 16))) for _ in range(12)]
+    done = []
+    steps = 0
+    while (queue or eng.active() or eng._pending
+           or eng._preempted) and steps < 2000:
+        if queue and rng.rand() < 0.5:
+            n = int(rng.randint(1, 4))
+            adm = eng.admit_many(queue[:n])
+            taken = {id(r) for r in adm}
+            queue = [r for r in queue if id(r) not in taken]
+        done += eng.step()
+        assert eng.bm.check_no_leak()
+        steps += 1
+    assert len(done) == 12 and all(r.done for r in done)
+    assert eng.bm.blocks_in_use() == 0 and eng.bm.reserved_blocks() == 0
+
+
+def test_admit_skips_ahead_past_stuck_large(setup):
+    """One oversized request must not starve fit-able smaller ones queued
+    behind it (bounded skip-ahead, approximate FIFO preserved)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                 n_blocks=9)                         # 8 physical blocks
+    hog = ServeRequest(prompt=list(range(1, 25)), max_new_tokens=8)
+    assert eng.admit(hog)                            # 4 of 8 blocks
+    big = ServeRequest(prompt=list(range(1, 33)), max_new_tokens=8)
+    smalls = [ServeRequest(prompt=[7, 8, 9], max_new_tokens=4)
+              for _ in range(2)]
+    admitted = eng.admit_many([big] + smalls)
+    # big needs 5 blocks (only 4 free) and is skipped; smalls drain past it
+    assert [r.rid for r in admitted] == [r.rid for r in smalls]
+    assert eng.stats.alloc_failures == 1
+    eng.drain()
+    assert eng.admit(big)                            # room freed: big fits
+    eng.drain()
+    assert big.done and hog.done and all(r.done for r in smalls)
+
+    # the window is bounded: admission stops scanning after admit_window
+    # failures instead of walking an arbitrarily long queue
+    eng2 = Engine(cfg, params, max_batch=8, max_len=64, block_size=8,
+                  n_blocks=3, admit_window=2)        # 2 physical blocks
+    rs = [ServeRequest(prompt=list(range(1, 30)), max_new_tokens=4)
+          for _ in range(6)]
+    assert eng2.admit_many(rs) == []
+    assert eng2.stats.alloc_failures == 2
+
+
+# -- tensor store: pinned keys survive take ------------------------------------
+
+def test_take_pinned_key_returns_none():
+    """Regression: ``take`` used to consume a key regardless of refcount,
+    yanking a pinned partition out from under attached engines."""
+    store = TensorStore()
+    store.put("m", "w", {"x": jnp.zeros((8,), jnp.float32)})
+    ref = store.attach("m", "w")
+    assert store.take("m", "w") is None       # pinned: not consumable
+    assert store.contains("m", "w")
+    assert store.attach("m", "w") is ref      # still the same arrays
+    store.detach("m", "w")
+    store.detach("m", "w")
+    assert store.take("m", "w") is not None   # unpinned: consumed
+    assert not store.contains("m", "w")
+    assert store.check_consistent()
+
+
+# -- server: preempt -> publish -> attach, budget-capped ----------------------
+
+def _run_server(cfg, params, engine_kw, budget=None, n_new=20,
+                use_kv_migration=True):
+    store = TensorStore(budget_bytes=budget)
+    srv = GlobalServer(cfg, store, max_batch=4, max_len=64,
+                       use_kv_migration=use_kv_migration,
+                       engine_kw=engine_kw)
+    srv.add_pipeline(params, ["inst-A"])
+    reqs = [ServeRequest(prompt=list(range(1, 10 + 2 * i)),
+                         max_new_tokens=n_new) for i in range(3)]
+    for r in reqs:
+        srv.submit(r)
+    srv.run_until_drained()
+    return srv, reqs
+
+
+def test_server_preempt_publish_attach_byte_identical(setup):
+    cfg, params = setup
+    _, ref = _run_server(cfg, params, {"block_size": 8})
+    srv, out = _run_server(
+        cfg, params,
+        {"block_size": 8, "n_blocks": 11, "kv_overcommit": 2.5})
+    kinds = [k for _, k, _ in srv.events]
+    assert kinds.count("preempt") >= 1
+    assert kinds.count("kv_publish") >= 1 and kinds.count("kv_attach") >= 1
+    assert all(r.done for r in out)
+    assert [list(r.generated) for r in out] \
+        == [list(r.generated) for r in ref]
+    # consumed payloads must not pin store memory
+    assert not [k for k in srv.store._store if k[0] == "__kv__"]
+    assert srv.store.check_consistent()
+
+
+def test_server_preempt_without_store_recomputes(setup):
+    cfg, params = setup
+    _, ref = _run_server(cfg, params, {"block_size": 8})
+    srv, out = _run_server(
+        cfg, params,
+        {"block_size": 8, "n_blocks": 11, "kv_overcommit": 2.5},
+        use_kv_migration=False)
+    kinds = [k for _, k, _ in srv.events]
+    assert kinds.count("preempt") >= 1 and kinds.count("kv_publish") == 0
+    assert [list(r.generated) for r in out] \
+        == [list(r.generated) for r in ref]
+
+
+def test_kv_publish_respects_store_budget(setup):
+    """The KV-publish path evicts to the store's byte budget before (and
+    via put, after) each publish: unpinned residency stays capped through
+    an interruption storm of payloads, and accounting stays consistent."""
+    cfg, params = setup
+    store = TensorStore()
+    srv = GlobalServer(cfg, store, max_batch=4, max_len=64,
+                       use_kv_migration=True, engine_kw={"block_size": 8})
+    srv.add_pipeline(params, ["inst-A", "inst-B"])
+    srv.add_pipeline(params, ["inst-C"])
+    weights_bytes = store.resident_bytes()     # pinned by the pipelines
+    reqs = [ServeRequest(prompt=list(range(1, 12)), max_new_tokens=16)
+            for _ in range(4)]
+    for r in reqs:
+        srv.submit(r)
+    for _ in range(4):
+        srv.step()
+        srv.tick()
+    # budget leaves room for roughly ONE KV payload beyond the weights
+    one_kv = None
+    for p in srv.pipelines:
+        live = p.engine.export_live_kv()
+        if live:
+            one_kv = next(iter(live.values()))
+            break
+    assert one_kv is not None
+    kv_bytes = one_kv["k"].nbytes + one_kv["v"].nbytes
+    store.budget_bytes = weights_bytes + int(1.5 * kv_bytes)
+    srv.interrupt_instance("inst-A")
+    kv_resident = sum(b for k, b in store._bytes.items()
+                      if k[0] == "__kv__")
+    assert kv_resident <= int(1.5 * kv_bytes)
+    assert store.check_consistent()
+    srv.run_until_drained()
+    assert all(r.done for r in reqs)           # evictees recomputed instead
+    assert store.check_consistent()
+
+
+# -- simulator: preemption priced as self-inflicted kv_restore -----------------
+
+def test_sim_kv_pool_preemption_prices_restore():
+    import dataclasses as dc
+
+    from repro.cluster.simulator import ClusterSim, FTConfig
+    from repro.cluster.workload import Request
+    from repro.core import populate_cluster
+    from repro.hw import AWS_INSTANCES, effective, paper_cluster
+    spec = get_config("llama-3.1-70b").to_modelspec()
+    insts = {n: dc.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    plan = populate_cluster(spec, paper_cluster(), insts, 763, 232,
+                            beam_k=1)
+    reqs = [Request(rid=i, arrival_s=0.0, s_in=512, s_out=64)
+            for i in range(8)]
+
+    def run(pool):
+        ft = FTConfig(use_spot=False, kv_pool_tokens=pool)
+        sim = ClusterSim(spec, plan.pipelines[:1], ft, 512, 64,
+                         efficiency=0.5)
+        return sim.run(reqs, duration_s=50_000.0, offline=True)
+
+    free = run(0)
+    tight = run(1100)          # < 2 finished contexts' worth of pool
+    assert free.kv_preemptions == 0
+    assert tight.kv_preemptions >= 1
+    assert len(tight.completed) == len(free.completed) == 8
+    # the self-inflicted restore round trips cost wall time
+    assert max(r.finish_s for r in tight.completed) \
+        > max(r.finish_s for r in free.completed)
+
+    # regression: a spot interruption clears the kv_preempted flag — the
+    # payload died with the node, so re-admission pays recompute (with
+    # migration off, from scratch) and TTFT stays well-defined
+    pool_name = plan.pipelines[0].stages[0].instance.name
+    ft = FTConfig(use_spot=True, request_migration=False,
+                  kv_pool_tokens=1100)
+    sim = ClusterSim(spec, plan.pipelines[:1], ft, 512, 64, efficiency=0.5)
+    res = sim.run(reqs, duration_s=50_000.0,
+                  events=[(20.0, pool_name, -1)], offline=True)
+    assert len(res.completed) == 8
+    assert all(r.first_token_s >= 0 for r in res.completed)
+    assert all(t >= 0 for t in res.latencies("ttft"))

@@ -209,7 +209,8 @@ def test_block_exhaustion_backpressures_admission(setup):
           for _ in range(4)]                      # 16 tokens -> 2 blocks each
     admitted = eng.admit_many(rs)
     assert len(admitted) == 2                     # 3rd would need a 3rd pair
-    assert eng.stats.alloc_failures == 1
+    # skip-ahead admission tries (and refuses) BOTH remaining requests
+    assert eng.stats.alloc_failures == 2
     eng.drain()
     assert eng.bm.blocks_in_use() == 0
     assert len(eng.admit_many(rs[2:])) == 2       # backpressure released

@@ -16,7 +16,12 @@ Enforced floors:
   * demand-paged (lazy) allocation admits >= 1.2x the concurrent
     mixed-length requests of upfront reservation at equal pool bytes, with
     byte-identical greedy outputs across the grow and preempt/re-admit
-    paths (protects the reservation-ledger refactor).
+    paths (protects the reservation-ledger refactor);
+  * prefix sharing at a 0.5 share-ratio workload admits >= 1.5x the
+    no-sharing engine at a tight pool OR cuts warm prefill tokens >= 40%,
+    with byte-identical greedy outputs sharing on vs off, and at least one
+    pipeline warm-up through the tensor store (protects the prefix-sharing
+    KV cache, bench_prefix_share.py).
 """
 
 from __future__ import annotations
@@ -31,6 +36,8 @@ MIN_ADMIT_SPEEDUP = 5.0
 MIN_PAGED_CAPACITY_RATIO = 1.5
 MIN_LAZY_CAPACITY_RATIO = 1.2         # lazy vs upfront at equal pool bytes
 MAX_PAGED_DECODE_REGRESSION = 0.20    # paged tok/s >= 0.8x contig
+MIN_PREFIX_CAPACITY_RATIO = 1.5       # share vs no-share at a tight pool
+MIN_PREFIX_WARM_REDUCTION = 0.40      # warm prefill-token cut at rho=0.5
 
 
 def parse_rows(text: str) -> List[Tuple[str, float, str]]:
@@ -84,8 +91,39 @@ def check(rows: List[Tuple[str, float, str]]) -> List[str]:
                     f"bucketed prefill retraces {vals.get('retraces')} "
                     f"exceed bucket count {buckets[0]}")
     failures += check_kv_paging(rows)
+    failures += check_prefix_share(rows)
     errors = [n for n, _, _ in rows if n.endswith("/ERROR")]
     failures += [f"suite error row: {n}" for n in errors]
+    return failures
+
+
+def check_prefix_share(rows: List[Tuple[str, float, str]]) -> List[str]:
+    failures = []
+    cap = [d for n, _, d in rows if n == "prefix_share/capacity"]
+    ident = [d for n, _, d in rows if n == "prefix_share/identity"]
+    if not cap or not ident:
+        return ["no prefix_share/capacity or /identity rows found"]
+    ratio = derived_floats(cap[0]).get("ratio", 0.0)
+    ivals = derived_floats(ident[0])
+    # the ISSUE-6 operating point: either lever alone justifies the cache
+    if ratio < MIN_PREFIX_CAPACITY_RATIO \
+            and ivals.get("reduction", 0.0) < MIN_PREFIX_WARM_REDUCTION:
+        failures.append(
+            f"prefix sharing capacity {ratio}x < "
+            f"{MIN_PREFIX_CAPACITY_RATIO}x AND warm prefill reduction "
+            f"{ivals.get('reduction')} < {MIN_PREFIX_WARM_REDUCTION}")
+    if ivals.get("identical", 0.0) != 1.0:
+        failures.append(
+            "greedy outputs diverged with prefix sharing on vs off: "
+            f"{ident[0]}")
+    warm = [d for n, _, d in rows if n == "prefix_share/warmup"]
+    if not warm:
+        failures.append("no prefix_share/warmup row found")
+    else:
+        wvals = derived_floats(warm[0])
+        if wvals.get("warmups", 0.0) < 1.0:
+            failures.append(
+                f"no pipeline prefix warm-up through the store: {warm[0]}")
     return failures
 
 

@@ -31,6 +31,7 @@ def main() -> None:
         ("search_speed", "benchmarks.bench_search_speed"),
         ("engine_throughput", "benchmarks.bench_engine_throughput"),
         ("kv_paging", "benchmarks.bench_kv_paging"),
+        ("prefix_share", "benchmarks.bench_prefix_share"),
         ("placement", "benchmarks.bench_placement"),
         ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
         ("init_overlap", "benchmarks.bench_init_overlap"),

@@ -69,3 +69,31 @@ def scale_rate(reqs: List[Request], factor: float) -> List[Request]:
     """Paper §7.2.2: scale arrival *intervals* by ``factor`` (keep pattern)."""
     return [dataclasses.replace(r, rid=i, arrival_s=r.arrival_s * factor)
             for i, r in enumerate(reqs)]
+
+
+def zipf_shared_prompts(n: int, n_prefixes: int = 4, prefix_len: int = 48,
+                        suffix_len: int = 8, share_ratio: float = 0.5,
+                        vocab: int = 32000, zipf_a: float = 1.2,
+                        seed: int = 0) -> List[List[int]]:
+    """Token-level prompts with production-like prefix reuse: a
+    ``share_ratio`` fraction of prompts opens with one of ``n_prefixes``
+    common system prompts (chosen Zipf-distributed, so a few prefixes are
+    hot and the tail is cold — the regime where a prefix-sharing KV cache
+    pays off), followed by a unique suffix; the rest are fully unique.
+    Token ids start at 1 (0 is reserved as pad across the repo)."""
+    rng = np.random.RandomState(seed)
+    def draw(m):
+        return (rng.randint(0, vocab - 1, size=m) + 1).tolist()
+    prefixes = [draw(prefix_len) for _ in range(n_prefixes)]
+    # Zipf over prefix ranks, truncated to the available set
+    ranks = np.arange(1, n_prefixes + 1, dtype=float)
+    pz = ranks ** -zipf_a
+    pz /= pz.sum()
+    prompts: List[List[int]] = []
+    for _ in range(n):
+        if rng.rand() < share_ratio:
+            pick = int(rng.choice(n_prefixes, p=pz))
+            prompts.append(prefixes[pick] + draw(suffix_len))
+        else:
+            prompts.append(draw(prefix_len + suffix_len))
+    return prompts

@@ -264,14 +264,27 @@ def cache_write_token_paged(cache_k: jax.Array, cache_v: jax.Array,
 
 def cache_write_chunk_paged(cache_k: jax.Array, cache_v: jax.Array,
                             k: jax.Array, v: jax.Array, base: jax.Array,
-                            block_tbl: jax.Array
+                            block_tbl: jax.Array,
+                            lens: Optional[jax.Array] = None
                             ) -> Tuple[jax.Array, jax.Array]:
     """Write a C-token chunk's K/V (B,C,nkv,d) at virtual positions
-    [base, base+C) through the block table."""
+    [base, base+C) through the block table. ``base`` may be per-row (B,) —
+    the prefix-sharing suffix path, where each row starts at its own
+    shared-prefix boundary — and ``lens`` (B,) masks each row's columns
+    past its real length into the trash block (pad rows/columns)."""
     blk = cache_k.shape[1]
-    t = base + jnp.arange(k.shape[1])                        # (C,)
-    dest = jnp.take(block_tbl, t // blk, axis=1)             # (B, C)
-    off = t % blk                                            # (C,) broadcasts
+    ar = jnp.arange(k.shape[1])                              # (C,)
+    if jnp.ndim(base) == 0:
+        t = base + ar                                        # (C,)
+        dest = jnp.take(block_tbl, t // blk, axis=1)         # (B, C)
+    else:
+        t = base[:, None] + ar[None, :]                      # (B, C)
+        # clamp: masked pad columns may index past the table width
+        t = jnp.minimum(t, block_tbl.shape[1] * blk - 1)
+        dest = jnp.take_along_axis(block_tbl, t // blk, axis=1)
+    off = t % blk                                            # broadcasts
+    if lens is not None:
+        dest = jnp.where(ar[None, :] < lens[:, None], dest, 0)
     return (cache_k.at[dest, off].set(k.astype(cache_k.dtype)),
             cache_v.at[dest, off].set(v.astype(cache_v.dtype)))
 

@@ -311,14 +311,16 @@ class LM:
         return x + self._mlp_or_moe(p, h), ck, cv
 
     def _dense_layer_chunk(self, p: Dict, x, q_pos, ck, cv, base,
-                           block_tbl=None):
+                           block_tbl=None, lens=None):
         """Chunked-prefill layer body: C new tokens against a linear cache.
 
         Writes the chunk's K/V at [base, base+C) and attends every query
         against the whole cache under per-query position masking — the
         C-token generalization of ``_dense_layer_decode``. With
         ``block_tbl`` the cache slice is a block pool and writes/reads go
-        through the table.
+        through the table; per-row ``base``/``lens`` (the prefix-sharing
+        suffix path) route each row to its own boundary and mask pad
+        columns into the trash block.
         """
         c = self.cfg
         h = self.norm(x, p["ln_attn"])
@@ -331,10 +333,11 @@ class LM:
         # kernel"); prefill/decode still route to the kernels
         if block_tbl is not None:
             ck, cv = attn.cache_write_chunk_paged(ck, cv, k, v, base,
-                                                  block_tbl)
+                                                  block_tbl, lens=lens)
             o = attn.chunk_attention_paged(q, ck, cv, block_tbl, q_pos,
                                            window=c.swa_window)
         else:
+            assert lens is None, "column masking requires the paged path"
             ck = jax.lax.dynamic_update_slice_in_dim(
                 ck, k.astype(ck.dtype), base, axis=1)
             cv = jax.lax.dynamic_update_slice_in_dim(
@@ -682,6 +685,45 @@ class LM:
             last = x[:, -1:, :]
         else:
             last = x[jnp.arange(b), last_pos][:, None, :]
+        logits = self.logits(params, last)[:, 0, :]
+        return logits, new_cache
+
+    def prefill_suffix(self, params: Dict, cache: Dict, tokens: jax.Array,
+                       bases: jax.Array, block_tbl: jax.Array,
+                       lens: jax.Array) -> Tuple[jax.Array, Dict]:
+        """Prefix-sharing suffix prefill: each row's first ``bases[i]``
+        tokens are already RESIDENT in the paged pool (shared-prefix blocks
+        mapped through ``block_tbl``), so only the divergent suffix is
+        computed — rows' queries sit at absolute positions
+        [bases, bases+lens) and attend the shared prefix through the block
+        table; suffix K/V writes land from each row's own boundary, with
+        columns past ``lens`` routed to the trash block (pad rows repeat
+        row 0, so duplicate writes agree). Because prefix activations are
+        causally independent of the suffix, this reproduces a full
+        prefill's K/V and logits exactly. Attention families with a paged
+        cache only. Returns (logits at each row's last real suffix token,
+        cache with k/v updated — the caller owns the ``pos`` update, which
+        is per-SLOT, not per-row).
+        """
+        c = self.cfg
+        assert c.family not in ("ssm", "hybrid") and not c.is_encdec, \
+            "suffix prefill requires attention-family KV caches"
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        b, cl = tokens.shape
+        q_pos = bases[:, None] + jnp.arange(cl)[None, :]
+
+        def body(h, xs):
+            p_l, ck, cv = xs
+            h, ck, cv = self._dense_layer_chunk(p_l, h, q_pos, ck, cv,
+                                                bases, block_tbl=block_tbl,
+                                                lens=lens)
+            return h, (ck, cv)
+        x, (ck, cv) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = ck, cv
+        x = self.norm(x, params["final_norm"])
+        last = x[jnp.arange(b), lens - 1][:, None, :]
         logits = self.logits(params, last)[:, 0, :]
         return logits, new_cache
 

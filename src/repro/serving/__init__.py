@@ -1,8 +1,9 @@
 from repro.serving.engine import Engine
 from repro.serving.kv_blocks import BlockManager
+from repro.serving.prefix_index import PrefixIndex
 from repro.serving.request import ServeRequest
 from repro.serving.server import FTTimes, GlobalServer, ServingPipeline
 from repro.serving.tensor_store import TensorStore
 
-__all__ = ["BlockManager", "Engine", "ServeRequest", "FTTimes",
-           "GlobalServer", "ServingPipeline", "TensorStore"]
+__all__ = ["BlockManager", "Engine", "PrefixIndex", "ServeRequest",
+           "FTTimes", "GlobalServer", "ServingPipeline", "TensorStore"]

@@ -34,6 +34,18 @@ admission throughput and trace stability:
   lazily-admitted pool can never preempt under ``kv_overcommit=1.0``
   either: reservations never exceed physical blocks, so every grow is
   covered).
+* **Prefix-sharing KV cache** (``prefix_share=True``, paged layout) — a
+  block-aligned prefix index (``serving/prefix_index.py``) is consulted at
+  admission: a request extending a cached prefix maps the shared blocks
+  into its slot table (refcounted, read-only), COPY-ON-WRITES the first
+  partially-shared boundary block, and prefills ONLY the divergent suffix
+  (``EngineStats.prefix_hits`` / ``prefix_shared_tokens`` /
+  ``cow_copies``). Freed blocks keep content until reallocated, so a hot
+  prefix survives its requests; ``hot_prefixes``/``warm_prefix`` round
+  shared-prefix payloads through the tensor store so re-placed pipelines
+  warm up instead of recomputing (``prefix_warmups``). Greedy outputs stay
+  byte-identical to the no-sharing engine (prefix activations are causally
+  independent of the suffix).
 * **Block-granular KV migration** — ``export_kv``/``import_kv`` round-trip
   a live request's blocks through the shared tensor store, so a migrated
   request re-attaches its KV instead of recomputing it (§5.1 upgraded via
@@ -115,6 +127,12 @@ class EngineStats:
     preemptions: int = 0        # slots evicted when a grow found a dry pool
     kv_exports: int = 0         # KV block sets published for migration
     kv_imports: int = 0         # re-admissions that attached KV (no prefill)
+    prefix_hits: int = 0        # admissions that mapped shared-prefix blocks
+    prefix_shared_tokens: int = 0   # prefill tokens NOT recomputed
+    cow_copies: int = 0         # boundary blocks copied before first write
+    prefix_warmups: int = 0     # published prefixes attached from the store
+    grow_ahead_skips: int = 0   # boundary crossings served by look-ahead
+    admit_deferred: int = 0     # admissions deferred for free-block headroom
 
 
 @dataclasses.dataclass
@@ -143,7 +161,8 @@ class Engine:
                  admission: str = "bucketed", kv_layout: str = "auto",
                  block_size: int = 16, n_blocks: int = 0,
                  kv_alloc: str = "lazy", kv_overcommit: float = 1.0,
-                 admit_window: int = 4):
+                 admit_window: int = 4, prefix_share: bool = False,
+                 grow_ahead: int = 1, admit_headroom: bool = True):
         assert admission in ("bucketed", "legacy"), admission
         assert kv_layout in ("auto", "paged", "contig"), kv_layout
         assert kv_alloc in ("lazy", "upfront"), kv_alloc
@@ -183,7 +202,10 @@ class Engine:
         self.kv_alloc = kv_alloc
         self._lazy = kv_alloc == "lazy" and kv_layout == "paged"
         self._admit_window = max(0, int(admit_window))
+        self._grow_ahead = max(1, int(grow_ahead))
+        self._admit_headroom = bool(admit_headroom)
         self.bm: Optional[BlockManager] = None
+        self._prefix = None
         self._tbl_dirty = False
         self.enc_frames = 8           # stubbed frontend frame count
         if kv_layout == "paged":
@@ -195,6 +217,15 @@ class Engine:
             self.cache = self.model.init_cache(
                 max_batch, max_len, vector_pos=True, kv_layout="paged",
                 n_blocks=n_blocks, block_size=block_size)
+            if prefix_share:
+                if admission == "legacy":
+                    raise ValueError(
+                        "prefix_share requires the bucketed paged engine")
+                from repro.serving.prefix_index import PrefixIndex
+                self._prefix = PrefixIndex(block_size, self.bm)
+                self.bm.on_reuse = self._prefix.invalidate_block
+        elif prefix_share:
+            raise ValueError("prefix_share requires kv_layout='paged'")
         elif cfg.is_encdec:
             self.cache = self.model.init_cache(max_batch, max_len,
                                                s_enc=self.enc_frames,
@@ -279,6 +310,34 @@ class Engine:
                                          cache["pos"])
             return logits, new_cache
 
+        def suffix_fn(params, cache, tokens, bases, lens, slots, tbls):
+            # prefix-sharing admission: prefill only the divergent suffix;
+            # the shared prefix is read through the (updated) block tables
+            self.stats.retraces += 1
+            self.stats.prefill_retraces += 1
+            logits, out = self.model.prefill_suffix(params, cache, tokens,
+                                                    bases, tbls, lens)
+            out["pos"] = out["pos"].at[slots].set(bases + lens)
+            out["block_tbl"] = out["block_tbl"].at[slots].set(tbls)
+            return logits, out
+
+        def cow_fn(cache, src, dst):
+            # copy-on-write a partially-shared boundary block BEFORE any
+            # divergent suffix write lands in it
+            self.stats.retraces += 1
+            out = dict(cache)
+            out["k"] = cache["k"].at[:, dst].set(cache["k"][:, src])
+            out["v"] = cache["v"].at[:, dst].set(cache["v"][:, src])
+            return out
+
+        def warm_fn(cache, k, v, ids):
+            # install a published shared-prefix payload into free blocks
+            self.stats.retraces += 1
+            out = dict(cache)
+            out["k"] = cache["k"].at[:, ids].set(k.astype(cache["k"].dtype))
+            out["v"] = cache["v"].at[:, ids].set(v.astype(cache["v"].dtype))
+            return out
+
         self._prefill_b = jax.jit(prefill_fn)
         self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
         # the group cache is NOT donated: a pending group's cache outlives
@@ -287,6 +346,9 @@ class Engine:
                    else scatter_contig_fn)
         self._scatter = jax.jit(scatter, donate_argnums=(0,))
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._suffix = jax.jit(suffix_fn, donate_argnums=(1,))
+        self._cow = jax.jit(cow_fn, donate_argnums=(0,))
+        self._warm = jax.jit(warm_fn, donate_argnums=(0,))
 
     # -- buckets ----------------------------------------------------------------
     def bucket_lens(self) -> List[int]:
@@ -360,13 +422,16 @@ class Engine:
         return {"blocks_in_use": self.bm.blocks_in_use(),
                 "blocks_free": self.bm.blocks_free(),
                 "reserved_blocks": self.bm.reserved_blocks(),
+                "outstanding_blocks": self.bm.outstanding_blocks(),
                 "frag_tokens": self.bm.frag_tokens(),
                 "peak_blocks": self.bm.peak_blocks,
                 "block_size": self.bm.block_size,
                 "n_blocks": self.bm.n_blocks,
                 "block_grows": self.stats.block_grows,
                 "preemptions": self.stats.preemptions,
-                "alloc_failures": self.stats.alloc_failures}
+                "alloc_failures": self.stats.alloc_failures,
+                "prefix_hits": self.stats.prefix_hits,
+                "cow_copies": self.stats.cow_copies}
 
     # -- admission --------------------------------------------------------------
     def admit(self, req: ServeRequest) -> bool:
@@ -392,8 +457,17 @@ class Engine:
         free = self.free_slots()
         admitted: List[ServeRequest] = []
         skipped = 0
+        # free blocks live slots will claim at their NEXT boundary crossing;
+        # admissions that would eat into it are deferred, so a fresh
+        # admission can't guarantee an immediate preemption storm
+        imminent = self._imminent_blocks() if (
+            self._admit_headroom and self._lazy) else 0
         groups: Dict[int, List[Tuple[ServeRequest, List[int], int]]] = {}
+        sgroups: Dict[int, List] = {}
         chunked: List[Tuple[ServeRequest, List[int], int]] = []
+        # blocks pre-indexed THIS call whose content only materializes when
+        # the full-prefill groups dispatch (before any suffix dispatch)
+        fresh_this_call: set = set()
         for r in reqs:               # done reqs need no slot: pass through
             if r.done:
                 self._admit_finished.append(r)
@@ -404,12 +478,30 @@ class Engine:
             assert self._total_tokens(r) <= self.max_len, \
                 "context exceeds engine max_len"
             slot = free[0]
+            toks: Optional[List[int]] = None
+            match = None
             if self.bm is not None:
                 # prefill length without materializing the token list (it
-                # is only built once the reservation succeeds)
+                # is only built once the reservation succeeds) — unless the
+                # prefix index needs it for matching
                 ctx = r.ctx_len - (1 if r.generated else 0)
                 live = ctx if self._lazy else None
-                if not self.bm.reserve(slot, self._total_tokens(r), live):
+                if self._prefix is not None:
+                    toks = self._prefill_tokens(r)
+                    match = self._prefix.match(toks)
+                shared = match.full if match is not None else None
+                n_sh = len(shared) if shared else 0
+                if imminent > 0:
+                    fresh = max(0, self.bm.blocks_for(ctx) - n_sh)
+                    if self.bm.blocks_free() - fresh < imminent:
+                        self.stats.admit_deferred += 1
+                        skipped += 1
+                        if skipped >= self._admit_window:
+                            break
+                        continue
+                boundary = match.boundary if match is not None else None
+                if not self.bm.reserve(slot, self._total_tokens(r), live,
+                                       shared=shared, boundary=boundary):
                     self.stats.alloc_failures += 1
                     skipped += 1
                     if skipped >= self._admit_window:
@@ -418,19 +510,49 @@ class Engine:
                 self.bm.note_live(slot, ctx)         # true-frag accounting
                 self._tbl_dirty = True
             free.pop(0)
-            toks = self._prefill_tokens(r)
+            if toks is None:
+                toks = self._prefill_tokens(r)
             if self.admission == "legacy":
                 self._admit_one_legacy(r, toks, slot)
+            elif match is not None and match.n_tokens > 0:
+                cow = None
+                if match.boundary is not None:
+                    # COW the partially-shared boundary block before any
+                    # suffix write lands in it. A donor admitted THIS call
+                    # hasn't prefilled yet — its copy is deferred to the
+                    # suffix dispatch (full-prefill groups run first, and
+                    # the donor's mapping keeps the source block pinned).
+                    dst = int(self.bm.table[slot, len(match.full)])
+                    if match.boundary in fresh_this_call:
+                        cow = (match.boundary, dst)
+                    else:
+                        self.cache = self._cow(self.cache, jnp.asarray(
+                            match.boundary), jnp.asarray(dst))
+                        self.stats.cow_copies += 1
+                self.stats.prefix_hits += 1
+                self.stats.prefix_shared_tokens += match.n_tokens
+                sgroups.setdefault(
+                    self._bucket(len(toks) - match.n_tokens), []).append(
+                    (r, toks, slot, match.n_tokens, cow))
             elif self._use_chunked(len(toks)):
                 self.slots[slot] = r
                 chunked.append((r, toks, slot))
             else:
                 groups.setdefault(self._bucket(len(toks)), []).append(
                     (r, toks, slot))
+                if self._prefix is not None:
+                    # pre-index so later requests in this SAME call share;
+                    # safe because every full-prefill group dispatches
+                    # before the first suffix dispatch
+                    self._index_insert(toks, slot)
+                    fresh_this_call.update(self.bm.slot_blocks(slot))
             admitted.append(r)
         for blen, items in sorted(groups.items()):
             for i in range(0, len(items), self._group):
                 self._admit_group(items[i:i + self._group], blen)
+        for blen, items in sorted(sgroups.items()):
+            for i in range(0, len(items), self._group):
+                self._admit_group_suffix(items[i:i + self._group], blen)
         # pendings admitted together share a group: one chunk dispatch per
         # step for the whole group instead of a batch-1 loop
         for i in range(0, len(chunked), self._group):
@@ -463,6 +585,52 @@ class Engine:
         self.stats.prefill_batches += 1
         for j, (r, toks, slot) in enumerate(items):
             self._install(r, slot, first[j])
+
+    def _admit_group_suffix(self, items, blen: int) -> None:
+        """Prefix-sharing admission: one batched SUFFIX prefill for <=
+        prefill_group requests sharing a suffix-length bucket. Each row's
+        shared prefix is already resident (mapped via its block table); the
+        dispatch computes/writes only the divergent suffix and samples the
+        first token from each row's last real suffix position."""
+        g, n = self._group, len(items)
+        tokens = np.zeros((g, blen), np.int32)
+        bases = np.zeros((g,), np.int32)
+        lens = np.zeros((g,), np.int32)
+        slots = np.zeros((g,), np.int32)
+        for j, (r, toks, slot, n_sh, cow) in enumerate(items):
+            if cow is not None:       # deferred COW: donor prefilled by now
+                self.cache = self._cow(self.cache, jnp.asarray(cow[0]),
+                                       jnp.asarray(cow[1]))
+                self.stats.cow_copies += 1
+            suf = toks[n_sh:]
+            tokens[j, :len(suf)] = suf
+            bases[j] = n_sh
+            lens[j] = len(suf)
+            slots[j] = slot
+        # pad rows replicate row 0: duplicate slot writes carry identical
+        # data, keeping the scatter deterministic
+        tokens[n:] = tokens[0]
+        bases[n:] = bases[0]
+        lens[n:] = lens[0]
+        slots[n:] = slots[0]
+        tbls = self.bm.table[slots]
+        logits, self.cache = self._suffix(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(bases), jnp.asarray(lens), jnp.asarray(slots),
+            jnp.asarray(tbls))
+        first = np.asarray(self.model.sample_greedy(logits))
+        self.stats.prefill_batches += 1
+        for j, (r, toks, slot, n_sh, cow) in enumerate(items):
+            self._index_insert(toks, slot)
+            self._install(r, slot, first[j])
+
+    def _index_insert(self, toks, slot: int) -> None:
+        """Register a freshly-prefilled context's blocks with the prefix
+        index (BEFORE ``_install`` may free an immediately-done slot — a
+        freed block's content stays valid, which is exactly how a hot
+        prefix survives its first request's completion)."""
+        if self._prefix is not None:
+            self._prefix.insert(toks, self.bm.slot_blocks(slot))
 
     def _scatter_group(self, group_cache, slots, rows, lens) -> None:
         """Fused install of a (remapped) group cache into slot rows, routed
@@ -573,6 +741,7 @@ class Engine:
         for j, m in finishers:
             m.done = True
             self.slots[m.slot] = None     # _install re-marks the slot
+            self._index_insert(list(m.tokens), m.slot)
             self._install(m.req, m.slot, first[j])
 
     # -- decode-time grow / preemption ------------------------------------------
@@ -608,10 +777,27 @@ class Engine:
         the slots that still decode this step."""
         grows0 = self.bm.grows
         alive = list(live)
+        k = self._grow_ahead
         for slot in list(live):
             if self.slots[slot] is None:        # preempted by an earlier grow
                 continue
-            while not self.bm.grow(slot, self.slots[slot].ctx_len):
+            need = self.slots[slot].ctx_len
+            if k > 1:
+                crossing = (self.bm.blocks_for(need)
+                            > self.bm.blocks_for(need - 1))
+                if crossing and (self.bm.covered_blocks(slot)
+                                 >= self.bm.blocks_for(need)):
+                    # hysteresis win: an earlier look-ahead grow already
+                    # covers this boundary crossing — no dispatch, no
+                    # preempt/re-admit thrash near pool-full
+                    self.stats.grow_ahead_skips += 1
+                    continue
+            # look ahead only with free-list headroom; exactly one block
+            # when the pool is tight (look-ahead must never force preempts)
+            ahead = (k - 1 if k > 1
+                     and self.bm.blocks_free() >= len(alive) + k else 0)
+            while not self.bm.grow(slot, need, ahead=ahead):
+                ahead = 0
                 victim = self._pick_victim(alive)
                 assert victim is not None, "grow failed with no live victim"
                 self._preempt(victim)
@@ -622,6 +808,20 @@ class Engine:
             self.stats.block_grows += self.bm.grows - grows0
             self._tbl_dirty = True
         return [i for i in alive if self.slots[i] is not None]
+
+    def _imminent_blocks(self) -> int:
+        """Free blocks live slots will need at their NEXT decode step's
+        boundary crossing — the headroom admission must not consume."""
+        if self.bm is None:
+            return 0
+        pend = self._pending_slots()
+        n = 0
+        for i, r in enumerate(self.slots):
+            if r is None or r.done or i in pend:
+                continue
+            n += max(0, self.bm.blocks_for(r.ctx_len + 1)
+                     - self.bm.covered_blocks(i))
+        return n
 
     # -- decode -----------------------------------------------------------------
     def step(self) -> List[ServeRequest]:
@@ -771,4 +971,66 @@ class Engine:
         self.cache["pos"] = self.cache["pos"].at[slot].set(payload["pos"])
         self.slots[slot] = req
         self.stats.kv_imports += 1
+        return True
+
+    # -- shared-prefix publication / warm-up (tentpole, cluster half) -----------
+    def export_prefix(self, tokens) -> Optional[Dict]:
+        """Snapshot the KV blocks of a fully-indexed token run for
+        publication to the tensor store (content-addressed by the run
+        itself). Full blocks only: partial boundary blocks keep mutating
+        under decode and are never published."""
+        if self._prefix is None:
+            return None
+        ids = self._prefix.full_run(tokens)
+        if not ids:
+            return None
+        idsj = jnp.asarray(ids)
+        toks = [int(t) for t in tokens[:len(ids) * self.bm.block_size]]
+        return {"k": self.cache["k"][:, idsj], "v": self.cache["v"][:, idsj],
+                "tokens": toks, "block_size": self.bm.block_size,
+                "arch": self.cfg.name}
+
+    def hot_runs(self, min_hits: int = 2) -> List[Tuple[int, ...]]:
+        """The hottest fully-indexed token runs (matched at least
+        ``min_hits`` times). Cheap — no KV gather — so the server can
+        content-address them against the store BEFORE exporting."""
+        return [] if self._prefix is None else self._prefix.hot(min_hits)
+
+    def hot_prefixes(self, min_hits: int = 2) -> List[Dict]:
+        """Payloads for the hottest shared-prefix runs — the server
+        publishes them to the store."""
+        out = []
+        for run in self.hot_runs(min_hits):
+            p = self.export_prefix(run)
+            if p is not None:
+                out.append(p)
+        return out
+
+    def warm_prefix(self, payload: Dict) -> bool:
+        """Attach a published shared-prefix payload: write its KV into
+        free blocks, index them, and hand the blocks straight back to the
+        free list (refcount 0) — warm, fully reclaimable, and mapped
+        read-only by the next admission matching the prefix. Returns False
+        (recompute fallback) on any incompatibility or when the prefix is
+        already resident."""
+        if self._prefix is None or self.bm is None:
+            return False
+        if payload.get("arch") != self.cfg.name \
+                or payload.get("block_size") != self.bm.block_size:
+            return False
+        toks = [int(t) for t in payload["tokens"]]
+        nb = len(toks) // self.bm.block_size
+        if nb <= 0 or payload["k"].shape[1] < nb:
+            return False
+        if len(self._prefix.full_run(toks)) >= nb:
+            return False             # already warm (or computed locally)
+        ids = self.bm.warm_blocks(nb)
+        if ids is None:
+            return False             # pool too tight right now
+        idsj = jnp.asarray(ids)
+        self.cache = self._warm(self.cache, jnp.asarray(payload["k"][:, :nb]),
+                                jnp.asarray(payload["v"][:, :nb]), idsj)
+        self._prefix.insert(toks[:nb * self.bm.block_size], ids)
+        self.bm.warm_release(ids)
+        self.stats.prefix_warmups += 1
         return True

@@ -28,6 +28,24 @@ round-trip through the shared tensor store — see serving/engine.py).
 A single request's worst case must always fit the pool physically, so a
 slot that is alone can never wedge on its own reservation.
 
+Blocks are SHAREABLE (prefix-sharing KV cache): a slot may map blocks
+already mapped by other slots — its leading ``n_shared`` table entries are
+read-only shared-prefix blocks, refcounted per block. ``free(slot)``
+decrements refcounts and only blocks reaching zero return to the free
+list. The ledger books only the FRESH (non-shared) worst case per slot and
+admission is gated on *unique blocks in use + outstanding demand*
+(outstanding = reserved-but-not-yet-allocated), so already-written blocks
+no longer count against the ledger twice — the "shrinking reservation"
+that lets ``kv_overcommit`` stay less aggressive for the same admitted
+capacity. Without sharing this gate is numerically identical to the old
+sum-of-reservations one.
+
+A freed block's CONTENT stays valid until the block is reallocated, which
+is what lets a prefix index keep pointing at free-list-resident blocks
+(warm prefixes survive request completion). Blocks registered in
+``indexed`` are handed out LAST by the free list, and when one is finally
+overwritten the ``on_reuse`` callback lets the index drop its entries.
+
 ``reserve(slot, n, live_tokens=None)`` with the default ``live_tokens``
 allocates everything up front — the pre-ledger behavior, kept as the
 ``kv_alloc="upfront"`` A/B baseline (``alloc`` is its alias).
@@ -39,7 +57,7 @@ the smaller waste-vs-lifetime-reservation number.
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -61,10 +79,16 @@ class BlockManager:
         # per-slot block table; row width = blocks needed for max_len
         self.table = np.full((max_slots, max_blocks_per_slot), TRASH_BLOCK,
                              np.int32)
-        self._owned: Dict[int, List[int]] = {}
-        self._reserved: Dict[int, int] = {}   # ledger: worst-case blocks
-        self._tokens: Dict[int, int] = {}     # requested lifetime tokens
-        self._live: Dict[int, int] = {}       # tokens actually written
+        self._mapped: Dict[int, List[int]] = {}   # table-order block ids
+        self._n_shared: Dict[int, int] = {}       # leading read-only blocks
+        self._reserved: Dict[int, int] = {}       # ledger: worst-case FRESH
+        self._tokens: Dict[int, int] = {}         # requested lifetime tokens
+        self._live: Dict[int, int] = {}           # tokens actually written
+        self.refcount: Dict[int, int] = {}        # block id -> #slots mapping
+        # free-list-resident blocks whose content a prefix index still
+        # references; reallocated only when nothing else is free
+        self.indexed: set = set()
+        self.on_reuse: Optional[Callable[[int], None]] = None
         self.peak_blocks = 0
         self.grows = 0                        # decode-time block allocations
 
@@ -79,41 +103,111 @@ class BlockManager:
     def reserved_blocks(self) -> int:
         return sum(self._reserved.values())
 
-    def can_reserve(self, n_tokens: int, live_tokens: int = None) -> bool:
+    def outstanding_blocks(self) -> int:
+        """Reserved-but-not-yet-allocated fresh blocks across all slots —
+        the demand the ledger still has to be able to satisfy."""
+        return sum(max(0, self._reserved[s]
+                       - (len(ids) - self._n_shared[s]))
+                   for s, ids in self._mapped.items())
+
+    def committed_blocks(self) -> int:
+        """Unique blocks in use plus outstanding demand — the quantity the
+        admission ledger actually gates on."""
+        return self.blocks_in_use() + self.outstanding_blocks()
+
+    def can_reserve(self, n_tokens: int, live_tokens: int = None,
+                    n_shared: int = 0, n_reclaim: int = 0) -> bool:
         live = n_tokens if live_tokens is None else min(live_tokens, n_tokens)
-        need_res = self.blocks_for(n_tokens)
-        return (need_res <= self.max_blocks_per_slot
+        need_phys = self.blocks_for(n_tokens)
+        fresh_live = max(0, self.blocks_for(live) - n_shared)
+        fresh_total = max(0, need_phys - n_shared)
+        return (need_phys <= self.max_blocks_per_slot
                 # worst case must fit the pool physically: a slot running
                 # alone must be able to grow to its reservation, or
                 # preemption could thrash without ever making room
-                and need_res <= self.n_blocks - 1
-                and self.reserved_blocks() + need_res
+                and need_phys <= self.n_blocks - 1
+                # committed = unique in-use + outstanding; without sharing
+                # this equals the old sum-of-reservations gate exactly
+                and self.committed_blocks() + n_reclaim + fresh_total
                 <= self.reservation_cap()
-                and self.blocks_for(live) <= len(self._free))
+                and fresh_live + n_reclaim <= len(self._free))
 
     def can_alloc(self, n_tokens: int) -> bool:
         return self.can_reserve(n_tokens)
 
+    # -- free-list internals ----------------------------------------------------
+    def _pop_free(self, avoid: Sequence[int] = ()) -> int:
+        """Pop a free block, preferring blocks no prefix index references;
+        overwriting an indexed block notifies ``on_reuse`` so the index
+        drops its (now stale) entries."""
+        for i in range(len(self._free) - 1, -1, -1):
+            bid = self._free[i]
+            if bid in avoid or bid in self.indexed:
+                continue
+            return self._free.pop(i)
+        for i in range(len(self._free) - 1, -1, -1):
+            bid = self._free[i]
+            if bid in avoid:
+                continue
+            self._free.pop(i)
+            self.indexed.discard(bid)
+            if self.on_reuse is not None:
+                self.on_reuse(bid)
+            return bid
+        raise AssertionError("pop from an exhausted free list")
+
+    def _reclaim(self, bid: int) -> None:
+        """Pull a specific free-list block back into use WITHOUT touching
+        its content — re-sharing a warm prefix block."""
+        self._free.remove(bid)
+
     # -- reserve / grow / free --------------------------------------------------
-    def reserve(self, slot: int, n_tokens: int,
-                live_tokens: int = None) -> bool:
+    def reserve(self, slot: int, n_tokens: int, live_tokens: int = None,
+                shared: Optional[Sequence[int]] = None,
+                boundary: Optional[int] = None) -> bool:
         """Book ``slot``'s worst-case ``n_tokens`` in the ledger and
         allocate only the blocks covering ``live_tokens`` (demand paging;
         default = everything up front). All-or-nothing: returns False
         leaving ledger and free list untouched when the reservation or the
-        immediate allocation can't be covered."""
-        assert slot not in self._owned, f"slot {slot} already allocated"
+        immediate allocation can't be covered.
+
+        ``shared``: full prefix blocks to map read-only (refcount++; blocks
+        sitting on the free list are reclaimed content-intact).
+        ``boundary``: a partially-matching prefix block to copy-on-write —
+        the first FRESH block (``table[slot, len(shared)]``) is its
+        destination; the caller copies content before any write lands. The
+        boundary source itself is never popped within this reservation."""
+        assert slot not in self._mapped, f"slot {slot} already allocated"
         live = n_tokens if live_tokens is None else min(live_tokens, n_tokens)
-        if not self.can_reserve(n_tokens, live):
+        sh = list(shared or [])
+        assert len(sh) * self.block_size <= live, \
+            "shared prefix exceeds the live context"
+        n_reclaim = sum(1 for b in sh if self.refcount.get(b, 0) == 0)
+        if not self.can_reserve(n_tokens, live, n_shared=len(sh),
+                                n_reclaim=n_reclaim):
             return False
-        need = self.blocks_for(live)
-        ids = [self._free.pop() for _ in range(need)]
-        self._owned[slot] = ids
-        self._reserved[slot] = self.blocks_for(n_tokens)
+        fresh_live = max(0, self.blocks_for(live) - len(sh))
+        avoid = set()
+        if boundary is not None and self.refcount.get(boundary, 0) == 0:
+            # the COW source lives on the free list: it must survive until
+            # the caller's copy, so this reservation may not pop it
+            avoid.add(boundary)
+            if fresh_live + n_reclaim + 1 > len(self._free):
+                return False
+        for b in sh:
+            if self.refcount.get(b, 0) == 0:
+                self._reclaim(b)
+        fresh = [self._pop_free(avoid) for _ in range(fresh_live)]
+        ids = sh + fresh
+        for b in ids:
+            self.refcount[b] = self.refcount.get(b, 0) + 1
+        self._mapped[slot] = ids
+        self._n_shared[slot] = len(sh)
+        self._reserved[slot] = max(0, self.blocks_for(n_tokens) - len(sh))
         self._tokens[slot] = n_tokens
         self._live[slot] = live
-        self.table[slot, :need] = ids
-        self.table[slot, need:] = TRASH_BLOCK
+        self.table[slot, :len(ids)] = ids
+        self.table[slot, len(ids):] = TRASH_BLOCK
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
         return True
 
@@ -122,55 +216,96 @@ class BlockManager:
         as the ``kv_alloc='upfront'`` baseline)."""
         return self.reserve(slot, n_tokens)
 
-    def grow(self, slot: int, n_tokens: int) -> bool:
+    def grow(self, slot: int, n_tokens: int, ahead: int = 0) -> bool:
         """Ensure ``slot``'s allocation covers ``n_tokens``, allocating the
-        missing blocks (decode crossed a block boundary). True when the
-        capacity already suffices; False when the free list can't cover it
-        (the caller preempts a victim and retries)."""
-        ids = self._owned.get(slot)
+        missing blocks (decode crossed a block boundary) plus up to
+        ``ahead`` extra look-ahead blocks when the free list can spare them
+        (grow hysteresis — fewer grow dispatches near block boundaries).
+        True when the capacity already suffices; False when the free list
+        can't cover the REQUIRED part (the caller preempts a victim and
+        retries; look-ahead never forces a preemption)."""
+        ids = self._mapped.get(slot)
         assert ids is not None, f"grow on unallocated slot {slot}"
         need = self.blocks_for(n_tokens)
-        assert need <= self._reserved[slot], \
-            f"slot {slot} growing past its reservation"
-        extra = need - len(ids)
-        if extra <= 0:
+        cap = self._n_shared[slot] + self._reserved[slot]
+        assert need <= cap, f"slot {slot} growing past its reservation"
+        must = need - len(ids)
+        if must <= 0:
             return True
-        if extra > len(self._free):
+        if must > len(self._free):
             return False
+        want = min(need + max(0, ahead), cap) - len(ids)
+        take = max(must, min(want, len(self._free)))
         base = len(ids)
-        new = [self._free.pop() for _ in range(extra)]
+        new = [self._pop_free() for _ in range(take)]
+        for b in new:
+            self.refcount[b] = self.refcount.get(b, 0) + 1
         ids.extend(new)
-        self.table[slot, base:base + extra] = new
-        self.grows += extra
+        self.table[slot, base:base + take] = new
+        self.grows += take
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
         return True
 
     def note_live(self, slot: int, n_tokens: int) -> None:
         """Record tokens actually written to ``slot`` (frag accounting)."""
-        if slot in self._owned:
+        if slot in self._mapped:
             self._live[slot] = n_tokens
 
     def free(self, slot: int) -> int:
-        """Return ``slot``'s blocks to the pool, release its reservation,
-        zero its table row."""
-        ids = self._owned.pop(slot, [])
+        """Unmap ``slot``'s blocks, release its reservation, zero its table
+        row. Shared blocks only return to the pool once their LAST sharer
+        frees (refcount 0); returns the number of blocks actually released.
+        Released blocks keep their content until reallocated, so a prefix
+        index may go on referencing them (``indexed``)."""
+        ids = self._mapped.pop(slot, [])
+        self._n_shared.pop(slot, None)
         self._reserved.pop(slot, None)
         self._tokens.pop(slot, None)
         self._live.pop(slot, None)
-        self._free.extend(reversed(ids))
+        released = 0
+        for bid in reversed(ids):
+            self.refcount[bid] -= 1
+            assert self.refcount[bid] >= 0, f"refcount underflow on {bid}"
+            if self.refcount[bid] == 0:
+                self._free.append(bid)
+                released += 1
         self.table[slot, :] = TRASH_BLOCK
-        return len(ids)
+        return released
 
     def free_all(self) -> None:
-        for slot in list(self._owned):
+        for slot in list(self._mapped):
             self.free(slot)
+
+    # -- warm-up (cluster prefix warm path) -------------------------------------
+    def warm_blocks(self, n: int) -> Optional[List[int]]:
+        """Borrow ``n`` free blocks to fill with a published prefix payload.
+        The caller writes their content, registers them with its index, and
+        hands them straight back via ``warm_release`` — warm blocks stay on
+        the free list (refcount 0, fully reclaimable), so warming NEVER
+        reduces usable capacity."""
+        if n <= 0 or n > len(self._free):
+            return None
+        return [self._pop_free() for _ in range(n)]
+
+    def warm_release(self, ids: Sequence[int]) -> None:
+        """Return warm blocks to the BOTTOM of the LIFO free list so they
+        are overwritten last."""
+        self._free[:0] = list(ids)
 
     # -- introspection ----------------------------------------------------------
     def slot_blocks(self, slot: int) -> List[int]:
-        return list(self._owned.get(slot, []))
+        return list(self._mapped.get(slot, []))
+
+    def shared_blocks(self, slot: int) -> int:
+        return self._n_shared.get(slot, 0)
+
+    def covered_blocks(self, slot: int) -> int:
+        return len(self._mapped.get(slot, ()))
 
     def blocks_in_use(self) -> int:
-        return sum(len(v) for v in self._owned.values())
+        """UNIQUE blocks in use: shared blocks count once however many
+        slots map them."""
+        return self.n_blocks - 1 - len(self._free)
 
     def blocks_free(self) -> int:
         return len(self._free)
@@ -183,20 +318,37 @@ class BlockManager:
         what the owning requests have actually written (live occupancy,
         not the lifetime reservation — mid-flight waste counts)."""
         return sum(len(ids) * self.block_size - self._live[s]
-                   for s, ids in self._owned.items())
+                   for s, ids in self._mapped.items())
 
     def check_no_leak(self) -> bool:
-        """Every non-trash block is either free or owned exactly once, and
-        the ledger brackets every slot's allocation:
-        live <= allocated capacity, allocated <= reserved."""
-        owned = [b for ids in self._owned.values() for b in ids]
-        seen = owned + self._free
-        if not (len(seen) == len(set(seen)) == self.n_blocks - 1
-                and TRASH_BLOCK not in seen):
+        """Every non-trash block is either free or mapped (shared blocks by
+        several slots, counted once), refcounts match the mappings exactly
+        (0 <= refcount; a block returns to the free list only at refcount
+        0), and the ledger brackets every slot's allocation:
+        live <= allocated capacity, fresh allocated <= fresh reserved."""
+        rc: Dict[int, int] = {}
+        for ids in self._mapped.values():
+            for b in ids:
+                rc[b] = rc.get(b, 0) + 1
+        mapped = set(rc)
+        free = set(self._free)
+        if len(free) != len(self._free):             # free-list duplicates
             return False
-        if not (set(self._owned) == set(self._reserved)
-                == set(self._live)):
+        if free & mapped or TRASH_BLOCK in free or TRASH_BLOCK in mapped:
+            return False
+        if free | mapped != set(range(1, self.n_blocks)):
+            return False
+        for bid, c in self.refcount.items():
+            if c < 0 or c != rc.get(bid, 0):
+                return False
+        if any(bid not in self.refcount for bid in mapped):
+            return False
+        if not (set(self._mapped) == set(self._reserved) == set(self._live)
+                == set(self._n_shared) == set(self._tokens)):
+            return False
+        if not self.indexed <= set(range(1, self.n_blocks)):
             return False
         return all(self._live[s] <= len(ids) * self.block_size
-                   and len(ids) <= self._reserved[s]
-                   for s, ids in self._owned.items())
+                   and 0 <= self._n_shared[s] <= len(ids)
+                   and len(ids) - self._n_shared[s] <= self._reserved[s]
+                   for s, ids in self._mapped.items())

@@ -80,7 +80,9 @@ class GlobalServer:
                  prefill_chunk: int = 0,
                  est_workload: Tuple[int, int] = (763, 232),
                  engine_kw: Optional[Dict] = None,
-                 use_kv_migration: bool = False):
+                 use_kv_migration: bool = False,
+                 use_prefix_share: bool = False,
+                 prefix_hot_hits: int = 2):
         self.cfg = cfg
         self.store = store
         self.ft = ft or FTTimes()
@@ -89,6 +91,13 @@ class GlobalServer:
         # recompute, and the recompute path must stay the tested default
         # (the paper's §5.1 baseline; recovery.decide weighs the two)
         self.use_kv_migration = use_kv_migration
+        # prefix sharing is likewise opt-in: engines index shared prompt
+        # prefixes, the server publishes HOT prefix payloads to the store
+        # under content-hash keys, and re-placed/new pipelines warm their
+        # caches from the store instead of recomputing (recompute fallback
+        # when the store lacks the prefix)
+        self.use_prefix_share = use_prefix_share
+        self.prefix_hot_hits = prefix_hot_hits
         self.use_concurrent_init = use_concurrent_init
         self.max_batch = max_batch
         self.max_len = max_len
@@ -96,6 +105,8 @@ class GlobalServer:
         self.engine_kw = dict(engine_kw or {})
         self.engine_kw.setdefault("use_pallas", use_pallas)
         self.engine_kw.setdefault("prefill_chunk", prefill_chunk)
+        if use_prefix_share:
+            self.engine_kw.setdefault("prefix_share", True)
         self.pipelines: List[ServingPipeline] = []
         self.clock = 0.0
         self._rr_credit: Dict[int, float] = {}
@@ -141,6 +152,9 @@ class GlobalServer:
                             placement=placement, round_s=round_s)
         self.pipelines.append(p)
         self._rr_credit[p.pid] = 0.0
+        # a newly-placed pipeline warms its cache from published hot
+        # prefixes instead of recomputing them on first contact
+        self._warm_prefixes(p)
         return p
 
     # -- dispatch ---------------------------------------------------------------
@@ -157,9 +171,52 @@ class GlobalServer:
 
     # -- serving loop -------------------------------------------------------------
     _KV_MODEL = "__kv__"
+    _PREFIX_MODEL = "__prefix__"
 
     def _kv_key(self, req: ServeRequest) -> str:
         return f"r{req.rid}"
+
+    def _prefix_key(self, arch: str, block_size: int, tokens) -> str:
+        """Content-hash key for a shared-prefix run: the token run (plus
+        arch and block geometry) IS the identity, so every pipeline that
+        computes the same hot prefix publishes to the same key exactly
+        once."""
+        import hashlib
+        import numpy as np
+        h = hashlib.sha1(
+            np.asarray(list(tokens), np.int64).tobytes()).hexdigest()
+        return f"{arch}/b{block_size}/{h[:16]}"
+
+    def _publish_hot_prefixes(self, p: ServingPipeline) -> None:
+        """Publish this pipeline's hottest shared-prefix block payloads
+        (budget-capped via the store's LRU insert path, like KV
+        migration payloads; unreferenced, so evictable). Runs are
+        content-addressed BEFORE export, so an already-published prefix
+        costs no KV gather."""
+        if not self.use_prefix_share or self.store is None:
+            return
+        eng = p.engine
+        for run in eng.hot_runs(self.prefix_hot_hits):
+            key = self._prefix_key(self.cfg.name, eng.bm.block_size, run)
+            if self.store.contains(self._PREFIX_MODEL, key):
+                continue
+            payload = eng.export_prefix(run)
+            if payload is not None:
+                self.store.put(self._PREFIX_MODEL, key, payload)
+                self.events.append((self.clock, "prefix_publish", key))
+
+    def _warm_prefixes(self, p: ServingPipeline) -> None:
+        """Warm a (new or rebuilt) pipeline's cache with every published
+        shared-prefix payload its engine can attach. ``peek`` is
+        non-consuming — warm-up is multi-consumer, unlike migrated-KV
+        ``take``. Absent or incompatible payloads simply leave the engine
+        on the recompute path (fallback preserved)."""
+        if not self.use_prefix_share or self.store is None:
+            return
+        for model, part in self.store.keys(self._PREFIX_MODEL):
+            payload = self.store.peek(model, part)
+            if payload is not None and p.engine.warm_prefix(payload):
+                self.events.append((self.clock, "prefix_warm", part))
 
     def _publish_kv(self, key: str, payload: Dict) -> None:
         """Publish one request's KV payload. Interruption grace-window and
@@ -230,6 +287,7 @@ class GlobalServer:
                 p.queue[:] = [r for r in p.queue if id(r) not in taken]
             fin = p.engine.step()
             self._drain_preempted(p)
+            self._publish_hot_prefixes(p)
             for r in list(p.engine.active()) + fin:
                 if r.first_token_s < 0 and r.generated:
                     r.first_token_s = self.clock
@@ -323,6 +381,9 @@ class GlobalServer:
             # rebuild engine NOW (attach-only when store present) so tokens
             # keep flowing the moment down_until passes
             p.engine = self._build_engine(p.engine.params)
+            # the rebuilt engine's cache is cold: re-warm published hot
+            # prefixes so post-revival admissions share instead of recompute
+            self._warm_prefixes(p)
         # re-dispatch affected requests to surviving pipelines; if none is
         # alive, requeue on the owner — it revives at down_until, and a
         # request must never be dropped because submit() had no target

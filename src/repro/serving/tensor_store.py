@@ -102,6 +102,24 @@ class TensorStore:
             self._register(key, params)
         return self._acquire(key), cold
 
+    def peek(self, model: str, partition: str) -> Optional[Any]:
+        """Non-consuming read: return the resident params (or None) WITHOUT
+        acquiring a reference or dropping the key. Multi-consumer payloads
+        — e.g. shared-prefix warm-up, where every new pipeline reads the
+        same published blocks — use this instead of ``take``. Touches the
+        LRU clock so hot payloads outlive cold ones under a byte budget."""
+        key = (model, partition)
+        if key not in self._store:
+            return None
+        self._touch(key)
+        return self._store[key]
+
+    def keys(self, model: Optional[str] = None) -> list[Key]:
+        """Resident (model, partition) keys, LRU order (stalest first),
+        optionally filtered to one model namespace."""
+        ks = sorted(self._store, key=lambda k: self._last_used[k])
+        return [k for k in ks if model is None or k[0] == model]
+
     def take(self, model: str, partition: str) -> Optional[Any]:
         """Consume a key: return its params and drop it from the store
         (single-consumer payloads, e.g. a migrated request's KV blocks).

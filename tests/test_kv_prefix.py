@@ -1,0 +1,391 @@
+"""Prefix-sharing KV cache: refcounted copy-on-write blocks, the radix
+prefix index at admission, the committed-blocks admission ledger, grow
+hysteresis, free-block admission headroom, and cluster-wide prefix warm-up
+through the tensor store (ISSUE 6)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cluster.workload import zipf_shared_prompts
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, GlobalServer, ServeRequest, TensorStore
+from repro.serving.kv_blocks import BlockManager
+from repro.serving.prefix_index import PrefixIndex
+
+
+def _params_for(cfg):
+    m = build_model(cfg, remat=False, attn_chunk=0)
+    return m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    return cfg, _params_for(cfg)
+
+
+def _drain(eng, reqs, rounds=500):
+    queue = list(reqs)
+    for _ in range(rounds):
+        if not (queue or eng.active() or eng._pending or eng._preempted):
+            break
+        if queue:
+            adm = eng.admit_many(queue)
+            taken = {id(r) for r in adm}
+            queue = [r for r in queue if id(r) not in taken]
+        eng.step()
+        # recompute path for anything the pool preempted (no server here)
+        for req, _ in eng.take_preempted():
+            queue.insert(0, req)
+    assert all(r.done for r in reqs)
+
+
+# -- block manager: refcounts, sharing, COW ------------------------------------
+
+def test_refcount_share_and_free():
+    bm = BlockManager(n_blocks=9, block_size=4, max_slots=4,
+                      max_blocks_per_slot=6)
+    assert bm.reserve(0, 12)                       # donor: 3 blocks
+    donor = bm.slot_blocks(0)
+    assert all(bm.refcount[b] == 1 for b in donor)
+    # sharer maps the donor's first two blocks read-only + 1 fresh
+    assert bm.reserve(1, 12, shared=donor[:2])
+    assert all(bm.refcount[b] == 2 for b in donor[:2])
+    assert bm.slot_blocks(1)[:2] == donor[:2]
+    assert bm.shared_blocks(1) == 2
+    assert bm.blocks_in_use() == 4                 # unique blocks, not 6
+    assert bm.check_no_leak()
+    # the donor finishing must NOT release the shared blocks
+    released = bm.free(0)
+    assert released == 1                           # only its private block
+    assert all(bm.refcount[b] == 1 for b in donor[:2])
+    assert bm.free(1) == 3
+    assert bm.blocks_in_use() == 0 and bm.blocks_free() == 8
+    assert bm.check_no_leak()
+
+
+def test_share_reclaims_free_list_blocks_content_intact():
+    """A finished donor's blocks sit on the free list content-intact; a
+    later sharer reclaims those exact ids instead of popping fresh ones."""
+    bm = BlockManager(n_blocks=9, block_size=4, max_slots=4,
+                      max_blocks_per_slot=6)
+    assert bm.reserve(0, 8)
+    donor = bm.slot_blocks(0)
+    bm.free(0)
+    assert all(b in bm._free for b in donor)
+    assert bm.reserve(1, 12, shared=donor)
+    assert bm.slot_blocks(1)[:2] == donor          # same ids, same content
+    assert all(bm.refcount[b] == 1 for b in donor)
+    assert bm.check_no_leak()
+
+
+def test_cow_boundary_dest_and_free_source_protection():
+    bm = BlockManager(n_blocks=6, block_size=4, max_slots=4,
+                      max_blocks_per_slot=5)
+    assert bm.reserve(0, 6)                        # 2 blocks, 2nd partial
+    full, boundary = bm.slot_blocks(0)
+    bm.free(0)                                     # both -> free list
+    # sharer: full block shared, boundary copy-on-written into its first
+    # fresh block; the free-list-resident source must survive the pops
+    assert bm.reserve(1, 10, shared=[full], boundary=boundary)
+    ids = bm.slot_blocks(1)
+    assert ids[0] == full
+    dst = ids[1]                                   # table[slot, len(shared)]
+    assert dst != boundary and boundary in bm._free
+    assert bm.check_no_leak()
+
+
+def test_committed_ledger_charges_shared_blocks_once():
+    """Satellite: the committed-blocks gate (unique in-use + outstanding)
+    equals the old sum-of-reservations without sharing, and admits MORE
+    with it — shared blocks are charged once, and converting reservations
+    to allocations never double-counts."""
+    bm = BlockManager(n_blocks=9, block_size=4, max_slots=8,
+                      max_blocks_per_slot=8)
+    assert bm.reserve(0, 16, 8)                    # 2 live + 2 outstanding
+    assert bm.outstanding_blocks() == 2
+    # no sharing: committed == sum of worst-case reservations (old gate)
+    assert bm.committed_blocks() == bm.blocks_for(16) == 4
+    assert bm.grow(0, 12)                          # reserved -> allocated
+    assert bm.committed_blocks() == 4              # conversion, not growth
+    donor = bm.slot_blocks(0)
+    assert bm.reserve(1, 16, 12, shared=donor[:2])
+    # sharer adds only its FRESH worst case (4 - 2 shared = 2)
+    assert bm.committed_blocks() == 6
+    # without sharing the same pair would commit 8 — the freed headroom is
+    # real admission capacity at the same pool
+    assert bm.check_no_leak()
+
+
+# -- prefix index --------------------------------------------------------------
+
+def test_index_match_full_partial_and_cap():
+    bm = BlockManager(n_blocks=12, block_size=4, max_slots=4,
+                      max_blocks_per_slot=8)
+    idx = PrefixIndex(4, bm)
+    toks = list(range(1, 11))                      # 2 full blocks + tail 2
+    assert bm.reserve(0, len(toks))
+    idx.insert(toks, bm.slot_blocks(0))
+    ids = bm.slot_blocks(0)
+    # full-block walk
+    m = idx.match(toks[:8] + [99, 98, 97])
+    assert m.n_tokens == 8 and m.full == ids[:2] and m.boundary is None
+    # partial boundary tail: first tail token matches, second diverges
+    m = idx.match(toks[:9] + [55, 54])
+    assert m.n_tokens == 9 and m.boundary == ids[2]
+    assert m.boundary_tokens == 1
+    # at least one token must remain to prefill: full-prompt match capped
+    m = idx.match(toks[:8])
+    assert m.n_tokens == 4                         # not 8
+    # idempotent: re-inserting under different blocks keeps the first entry
+    assert bm.reserve(1, len(toks))
+    idx.insert(toks, bm.slot_blocks(1))
+    assert idx.match(toks[:8] + [99]).full == ids[:2]
+
+
+def test_index_invalidation_drops_deeper_runs():
+    bm = BlockManager(n_blocks=12, block_size=4, max_slots=4,
+                      max_blocks_per_slot=8)
+    idx = PrefixIndex(4, bm)
+    toks = list(range(1, 13))                      # 3 full blocks
+    assert bm.reserve(0, len(toks))
+    ids = bm.slot_blocks(0)
+    idx.insert(toks, ids)
+    assert ids[1] in bm.indexed
+    # losing block 1 must drop the depth-2 run AND the deeper depth-3 run
+    # (which extends through it), but keep depth 1
+    idx.invalidate_block(ids[1])
+    assert idx.match(toks + [99]).n_tokens == 4
+    assert ids[1] not in bm.indexed
+
+
+# -- engine: byte-identity, COW, survival --------------------------------------
+
+def _share_pair(cfg, params, prompts, max_new=4, **kw):
+    """Outputs for the same workload with sharing off vs on."""
+    outs = []
+    for share in (False, True):
+        eng = Engine(cfg, params, max_batch=8, max_len=64,
+                     kv_layout="paged", block_size=4, prefix_share=share,
+                     **kw)
+        reqs = [ServeRequest(prompt=list(p), max_new_tokens=max_new)
+                for p in prompts]
+        _drain(eng, reqs)
+        assert eng.bm.check_no_leak()
+        outs.append(([list(r.generated) for r in reqs], eng))
+    return outs
+
+
+def test_shared_prefix_byte_identity(setup):
+    cfg, params = setup
+    base = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8]    # 3 full blocks
+    prompts = [base + [10 + i, 20 + i] for i in range(4)]
+    (ref, _), (out, eng) = _share_pair(cfg, params, prompts)
+    assert out == ref
+    assert eng.stats.prefix_hits == 3
+    assert eng.stats.prefix_shared_tokens == 3 * 12
+
+
+def test_boundary_cow_byte_identity(setup):
+    """Sharers diverging INSIDE the donor's partial boundary block force a
+    copy-on-write; outputs must still match the no-sharing engine."""
+    cfg, params = setup
+    base = [3, 1, 4, 1, 5, 9, 2, 6]                # 2 full blocks
+    donor = base + [7, 7]                          # partial boundary block
+    prompts = [donor] + [base + [7, 30 + i, 40 + i] for i in range(3)]
+    (ref, _), (out, eng) = _share_pair(cfg, params, prompts)
+    assert out == ref
+    assert eng.stats.cow_copies >= 1
+    # boundary sharers matched 2 full blocks + 1 boundary token
+    assert eng.stats.prefix_hits == 3
+
+
+def test_prefix_survives_request_completion(setup):
+    """Freed blocks keep content until reallocated: a second wave sharing
+    the first wave's prefix hits the index with no donor alive."""
+    cfg, params = setup
+    base = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 8]
+    eng = Engine(cfg, params, max_batch=4, max_len=64, kv_layout="paged",
+                 block_size=4, prefix_share=True)
+    r1 = [ServeRequest(prompt=base + [10, 11], max_new_tokens=3)]
+    _drain(eng, r1)
+    assert eng.bm.blocks_in_use() == 0             # wave 1 fully freed
+    r2 = [ServeRequest(prompt=base + [20 + i, 21], max_new_tokens=3)
+          for i in range(3)]
+    _drain(eng, r2)
+    assert eng.stats.prefix_hits == 3
+    ref = Engine(cfg, params, max_batch=4, max_len=64, kv_layout="paged",
+                 block_size=4)
+    rr = [ServeRequest(prompt=list(r.prompt), max_new_tokens=3) for r in r2]
+    _drain(ref, rr)
+    assert [list(a.generated) for a in r2] == \
+        [list(b.generated) for b in rr]
+
+
+def test_seeded_share_churn_no_leak(setup):
+    """Satellite: seeded admit/share/COW/preempt/finish churn on a tight
+    overcommitted pool keeps every refcount invariant intact and stays
+    byte-identical to the no-sharing engine."""
+    cfg, params = setup
+    rng = np.random.RandomState(0)
+    base = [int(t) for t in rng.randint(1, cfg.vocab, size=10)]
+    prompts = []
+    for i in range(12):
+        cut = int(rng.choice([4, 8, 10]))          # full / partial overlap
+        tail = [int(t) for t in rng.randint(1, cfg.vocab, size=12 - cut)]
+        prompts.append(base[:cut] + tail)
+    outs = []
+    for share in (False, True):
+        eng = Engine(cfg, params, max_batch=4, max_len=64,
+                     kv_layout="paged", block_size=4, n_blocks=17,
+                     kv_overcommit=1.5, prefix_share=share)
+        reqs = [ServeRequest(prompt=list(p),
+                             max_new_tokens=3 + (i % 5))
+                for i, p in enumerate(prompts)]
+        queue = list(reqs)
+        for _ in range(500):
+            if not (queue or eng.active() or eng._pending
+                    or eng._preempted):
+                break
+            if queue:
+                adm = eng.admit_many(queue)
+                taken = {id(r) for r in adm}
+                queue = [r for r in queue if id(r) not in taken]
+            eng.step()
+            for req, _ in eng.take_preempted():
+                queue.insert(0, req)
+            assert eng.bm.check_no_leak()          # invariant EVERY round
+        assert all(r.done for r in reqs)
+        assert eng.bm.blocks_in_use() == 0
+        outs.append([list(r.generated) for r in reqs])
+    assert outs[0] == outs[1]
+
+
+# -- grow hysteresis -----------------------------------------------------------
+
+def test_grow_hysteresis_fewer_dispatches_same_tokens(setup):
+    """Satellite: grow_ahead=k allocates k blocks per boundary crossing
+    when the pool has headroom, so later crossings skip the grow entirely —
+    same outputs, fewer grow rounds."""
+    cfg, params = setup
+    outs = {}
+    for k in (1, 4):
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     kv_layout="paged", block_size=4, grow_ahead=k)
+        reqs = [ServeRequest(prompt=[7, 3, 5, 2, 9, 1],
+                             max_new_tokens=20)]
+        _drain(eng, reqs)
+        outs[k] = ([list(r.generated) for r in reqs], eng.stats)
+    assert outs[1][0] == outs[4][0]
+    assert outs[4][1].grow_ahead_skips > 0
+    assert outs[1][1].grow_ahead_skips == 0        # k=1 is the old behavior
+
+
+# -- admission headroom --------------------------------------------------------
+
+def test_admit_headroom_defers_instead_of_preempting(setup):
+    """Satellite: with live slots one token from a block boundary, an
+    admission that would consume their next block is deferred — no
+    admission-triggered preemption storm. Gating off reproduces the storm."""
+    cfg, params = setup
+    out = {}
+    for headroom in (True, False):
+        eng = Engine(cfg, params, max_batch=4, max_len=32,
+                     kv_layout="paged", block_size=4, n_blocks=9,
+                     kv_overcommit=2.0, admit_headroom=headroom)
+        a = ServeRequest(prompt=[5, 4, 3, 2, 1, 6, 7], max_new_tokens=9)
+        assert eng.admit_many([a])
+        assert a.ctx_len == 8                      # boundary on next decode
+        b = ServeRequest(prompt=[11] * 24, max_new_tokens=4)
+        queue = [b]
+        for _ in range(60):
+            if a.done and b.done:
+                break
+            adm = eng.admit_many(queue)
+            taken = {id(r) for r in adm}
+            queue = [r for r in queue if id(r) not in taken]
+            eng.step()
+            for req, _ in eng.take_preempted():
+                queue.insert(0, req)
+        assert a.done and b.done
+        assert eng.bm.check_no_leak()
+        out[headroom] = (eng.stats.admit_deferred, eng.stats.preemptions,
+                         list(a.generated), list(b.generated))
+    deferred_on, preempts_on = out[True][0], out[True][1]
+    deferred_off, preempts_off = out[False][0], out[False][1]
+    assert deferred_on > 0 and preempts_on == 0
+    assert deferred_off == 0 and preempts_off > 0
+    assert out[True][2:] == out[False][2:]         # same tokens either way
+
+
+# -- cluster warm-up through the tensor store ----------------------------------
+
+def test_server_publishes_and_warms_prefixes(setup):
+    cfg, params = setup
+    prompts = zipf_shared_prompts(10, n_prefixes=2, prefix_len=12,
+                                  suffix_len=4, share_ratio=1.0,
+                                  vocab=cfg.vocab, zipf_a=3.0, seed=3)
+    store = TensorStore()
+    srv = GlobalServer(cfg, store, max_batch=4, max_len=64,
+                       engine_kw={"kv_layout": "paged", "block_size": 4},
+                       use_prefix_share=True, prefix_hot_hits=2)
+    p0 = srv.add_pipeline(params, ["inst-A"])
+    for p in prompts:
+        p0.queue.append(ServeRequest(prompt=list(p), max_new_tokens=4))
+    srv.run_until_drained()
+    assert any(k == "prefix_publish" for _, k, _ in srv.events)
+    assert store.keys(srv._PREFIX_MODEL)
+    # a newly-placed pipeline warms from the store...
+    p1 = srv.add_pipeline(params, ["inst-B"])
+    assert p1.engine.stats.prefix_warmups >= 1
+    warms = sum(1 for _, k, _ in srv.events if k == "prefix_warm")
+    assert warms >= 1
+    # ...and an interrupt-rebuilt pipeline re-warms its cold cache
+    srv.interrupt_instance("inst-A")
+    assert sum(1 for _, k, _ in srv.events if k == "prefix_warm") > warms
+    # warmed blocks serve a FIRST-contact request without recompute
+    hot = prompts[0][:12]
+    probe = ServeRequest(prompt=list(hot) + [7, 9, 11, 13],
+                         max_new_tokens=3)
+    p1.queue.append(probe)
+    srv.run_until_drained()
+    assert p1.engine.stats.prefix_hits >= 1
+    assert all(p.engine.bm.check_no_leak() for p in srv.pipelines)
+    assert store.check_consistent()
+
+
+def test_warm_prefix_recompute_fallback(setup):
+    """An empty or incompatible store leaves warm-up on the recompute
+    path: no events, no warmups, requests still complete."""
+    cfg, params = setup
+    srv = GlobalServer(cfg, TensorStore(), max_batch=2, max_len=64,
+                       engine_kw={"kv_layout": "paged", "block_size": 4},
+                       use_prefix_share=True)
+    p0 = srv.add_pipeline(params, ["inst-A"])      # store empty: no warm
+    assert p0.engine.stats.prefix_warmups == 0
+    assert not any(k == "prefix_warm" for _, k, _ in srv.events)
+    # incompatible payload (wrong arch) is skipped, not attached
+    assert not p0.engine.warm_prefix(
+        {"arch": "other", "block_size": 4, "tokens": [1, 2, 3, 4],
+         "k": None, "v": None})
+    r = ServeRequest(prompt=[1, 2, 3, 4, 5], max_new_tokens=4)
+    srv.submit(r)
+    srv.run_until_drained()
+    assert r.done and len(r.generated) == 4
+
+
+def test_store_peek_and_keys():
+    store = TensorStore()
+    store.put("__prefix__", "a", {"x": 1})
+    store.put("__prefix__", "b", {"x": 2})
+    store.put("m", "w", {"x": 3})
+    assert store.keys("__prefix__") == [("__prefix__", "a"),
+                                        ("__prefix__", "b")]
+    # peek is non-consuming and touches LRU order
+    assert store.peek("__prefix__", "a")["x"] == 1
+    assert store.contains("__prefix__", "a")
+    assert store.keys("__prefix__")[0] == ("__prefix__", "b")
+    assert store.peek("__prefix__", "missing") is None
+    assert store.check_consistent()

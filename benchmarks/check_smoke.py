@@ -1,7 +1,15 @@
 """CI benchmark-smoke gate: parse a ``benchmarks.run`` Rows CSV and fail
 the build when a protected performance floor regresses.
 
-  python -m benchmarks.check_smoke <rows.csv>
+  python -m benchmarks.check_smoke <rows.csv> [--baseline baselines.csv]
+
+With ``--baseline``, additionally compare the TRACKED derived metrics
+against a committed baseline CSV (same Rows format) and fail on any >20%
+regression — trend tracking on top of the static floors below. Only
+deterministic count-based ratios are tracked (admission capacity ratios,
+prefill-token reduction, the routing $/token ratio): wall-time rows vary
+with the CI machine and would flake; the static time budgets still bound
+them. See benchmarks/README.md for re-baselining.
 
 Enforced floors:
   * paper-cluster qwen3-32b placement search <= 10 s at every beam width
@@ -21,7 +29,12 @@ Enforced floors:
     no-sharing engine at a tight pool OR cuts warm prefill tokens >= 40%,
     with byte-identical greedy outputs sharing on vs off, and at least one
     pipeline warm-up through the tensor store (protects the prefix-sharing
-    KV cache, bench_prefix_share.py).
+    KV cache, bench_prefix_share.py);
+  * bucket-aware cost dispatch serves the mixed short/long workload at
+    <= 0.85x the $/token of uniform dispatch with byte-identical greedy
+    outputs, and the histogram $/token objective picks the cheap low-HBM
+    instance for short-only traffic but high-HBM for the mixed histogram
+    (protects length/cost-aware routing, bench_routing.py).
 """
 
 from __future__ import annotations
@@ -38,6 +51,19 @@ MIN_LAZY_CAPACITY_RATIO = 1.2         # lazy vs upfront at equal pool bytes
 MAX_PAGED_DECODE_REGRESSION = 0.20    # paged tok/s >= 0.8x contig
 MIN_PREFIX_CAPACITY_RATIO = 1.5       # share vs no-share at a tight pool
 MIN_PREFIX_WARM_REDUCTION = 0.40      # warm prefill-token cut at rho=0.5
+MAX_ROUTING_COST_RATIO = 0.85         # bucket-aware $/token vs uniform
+
+# --baseline trend tracking: (row name, derived key, better direction).
+# Deterministic count-based ratios ONLY — wall-time metrics flake across
+# CI machines and stay guarded by the static budgets above.
+BASELINE_TOLERANCE = 0.20
+TRACKED = [
+    ("kv_paging/capacity", "ratio", "higher"),
+    ("kv_paging/lazy_capacity", "ratio", "higher"),
+    ("prefix_share/capacity", "ratio", "higher"),
+    ("prefix_share/identity", "reduction", "higher"),
+    ("routing/cost", "ratio", "lower"),
+]
 
 
 def parse_rows(text: str) -> List[Tuple[str, float, str]]:
@@ -92,6 +118,7 @@ def check(rows: List[Tuple[str, float, str]]) -> List[str]:
                     f"exceed bucket count {buckets[0]}")
     failures += check_kv_paging(rows)
     failures += check_prefix_share(rows)
+    failures += check_routing(rows)
     errors = [n for n, _, _ in rows if n.endswith("/ERROR")]
     failures += [f"suite error row: {n}" for n in errors]
     return failures
@@ -124,6 +151,74 @@ def check_prefix_share(rows: List[Tuple[str, float, str]]) -> List[str]:
         if wvals.get("warmups", 0.0) < 1.0:
             failures.append(
                 f"no pipeline prefix warm-up through the store: {warm[0]}")
+    return failures
+
+
+def check_routing(rows: List[Tuple[str, float, str]]) -> List[str]:
+    failures = []
+    cost = [d for n, _, d in rows if n == "routing/cost"]
+    if not cost:
+        return ["no routing/cost row found"]
+    vals = derived_floats(cost[0])
+    if vals.get("ratio", 1e9) > MAX_ROUTING_COST_RATIO:
+        failures.append(
+            f"bucket-aware $/token ratio {vals.get('ratio')} > "
+            f"{MAX_ROUTING_COST_RATIO}x uniform ceiling")
+    if vals.get("identical", 0.0) != 1.0:
+        failures.append(
+            "greedy outputs diverged across dispatch policies: "
+            f"{cost[0]}")
+    mix = [d for n, _, d in rows if n == "routing/placement_mix"]
+    if not mix:
+        failures.append("no routing/placement_mix row found")
+    else:
+        mvals = derived_floats(mix[0])
+        if mvals.get("short_picks_low", 0.0) != 1.0 \
+                or mvals.get("mixed_picks_high", 0.0) != 1.0:
+            failures.append(
+                "histogram $/token objective picked the wrong instance "
+                f"mix: {mix[0]}")
+    return failures
+
+
+def check_baseline(rows: List[Tuple[str, float, str]],
+                   baseline: List[Tuple[str, float, str]]) -> List[str]:
+    """Fail on >BASELINE_TOLERANCE regression of any TRACKED metric vs
+    the committed baseline. A metric absent from the baseline is skipped
+    with a note (commit a re-baseline to start tracking it); a metric
+    present in the baseline but missing from the new rows is a failure
+    (the suite silently stopped reporting it)."""
+    failures = []
+
+    def value_of(rs, name, key):
+        for n, _, d in rs:
+            if n == name:
+                return derived_floats(d).get(key)
+        return None
+
+    for name, key, direction in TRACKED:
+        base = value_of(baseline, name, key)
+        new = value_of(rows, name, key)
+        if base is None:
+            print(f"[check_smoke] note: {name} {key}= not in baseline — "
+                  "skipped (re-baseline to track it)")
+            continue
+        if new is None:
+            failures.append(
+                f"tracked row {name} ({key}=) missing from new rows")
+            continue
+        if direction == "higher":
+            floor = base * (1.0 - BASELINE_TOLERANCE)
+            if new < floor:
+                failures.append(
+                    f"{name}: {key}={new:.3f} regressed "
+                    f">{BASELINE_TOLERANCE:.0%} below baseline {base:.3f}")
+        else:
+            ceil = base * (1.0 + BASELINE_TOLERANCE)
+            if new > ceil:
+                failures.append(
+                    f"{name}: {key}={new:.3f} regressed "
+                    f">{BASELINE_TOLERANCE:.0%} above baseline {base:.3f}")
     return failures
 
 
@@ -175,10 +270,20 @@ def check_kv_paging(rows: List[Tuple[str, float, str]]) -> List[str]:
 
 
 def main() -> None:
-    path = sys.argv[1]
+    args = sys.argv[1:]
+    baseline_path = None
+    if "--baseline" in args:
+        i = args.index("--baseline")
+        baseline_path = args[i + 1]
+        del args[i:i + 2]
+    path = args[0]
     with open(path) as f:
         rows = parse_rows(f.read())
     failures = check(rows)
+    if baseline_path:
+        with open(baseline_path) as f:
+            baseline = parse_rows(f.read())
+        failures += check_baseline(rows, baseline)
     if failures:
         for f_ in failures:
             print(f"[check_smoke] FAIL: {f_}")

@@ -10,6 +10,7 @@ form by default; REPRO_FULL=1 enables paper-scale parameters.
   §Roofline -> roofline_report            §4.2 search -> bench_search_speed
   §5 exec plane -> bench_engine_throughput
   paged KV layout -> bench_kv_paging
+  length/cost routing -> bench_routing
 """
 
 from __future__ import annotations
@@ -32,6 +33,7 @@ def main() -> None:
         ("engine_throughput", "benchmarks.bench_engine_throughput"),
         ("kv_paging", "benchmarks.bench_kv_paging"),
         ("prefix_share", "benchmarks.bench_prefix_share"),
+        ("routing", "benchmarks.bench_routing"),
         ("placement", "benchmarks.bench_placement"),
         ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
         ("init_overlap", "benchmarks.bench_init_overlap"),

@@ -3,9 +3,10 @@ from repro.cluster.spot_trace import (PAPER_POOLS, AvailabilityTrace,
                                       generate_trace,
                                       interruption_events_for_window,
                                       select_scenario)
-from repro.cluster.workload import Request, azure_conversation_like
+from repro.cluster.workload import (Request, azure_conversation_like,
+                                    length_histogram)
 
 __all__ = ["ClusterSim", "FTConfig", "SimResult", "PAPER_POOLS",
            "AvailabilityTrace", "generate_trace", "select_scenario",
            "interruption_events_for_window", "Request",
-           "azure_conversation_like"]
+           "azure_conversation_like", "length_histogram"]

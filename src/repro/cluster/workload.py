@@ -71,6 +71,15 @@ def scale_rate(reqs: List[Request], factor: float) -> List[Request]:
             for i, r in enumerate(reqs)]
 
 
+def length_histogram(reqs: List[Request], buckets=None) -> List[List[float]]:
+    """Normalized (input-len, output-len) bucket weights of a trace — the
+    traffic histogram the $/token placement objective
+    (``core.buckets.HistogramCostObjective``) and bucket-aware dispatch
+    are parameterized by."""
+    from repro.core.buckets import workload_histogram
+    return workload_histogram([(r.s_in, r.s_out) for r in reqs], buckets)
+
+
 def zipf_shared_prompts(n: int, n_prefixes: int = 4, prefix_len: int = 48,
                         suffix_len: int = 8, share_ratio: float = 0.5,
                         vocab: int = 32000, zipf_a: float = 1.2,

@@ -5,21 +5,29 @@
   * estimator.py  — static latency + throughput estimation (Eqs. 1, 4, 5)
   * eval_engine.py— prefix-sum cost tables: O(1) stage scoring for search
   * objective.py  — throughput-per-cost objective with SLO penalty (Eq. 7)
+  * buckets.py    — length-bucket throughput tables + $/token objective
   * placement.py  — DP + beam-search placement optimizer (Algorithm 1)
   * cluster_opt.py— iterative pipeline extraction to populate a cluster
   * baselines.py  — vLLM / AlpaServe / HexGen-style placement baselines
   * modelspec.py  — analytical architecture description
 """
 
+from repro.core.buckets import (BucketEstimator, BucketTable,
+                                HistogramCostObjective, LengthBuckets,
+                                bucket_table, histogram_cost_per_token,
+                                workload_histogram)
 from repro.core.cluster_opt import ClusterPlan, populate_cluster
 from repro.core.estimator import PerfEstimate, Placement, Stage, estimate
 from repro.core.eval_engine import FastEstimator, StageTable
 from repro.core.modelspec import LayerSpec, ModelSpec, uniform_decoder
-from repro.core.objective import Objective
+from repro.core.objective import Objective, cost_per_token
 from repro.core.placement import PlacementOptimizer, SearchResult
 
 __all__ = [
     "Placement", "PerfEstimate", "Stage", "estimate", "FastEstimator",
     "StageTable", "LayerSpec", "ModelSpec", "uniform_decoder", "Objective",
-    "PlacementOptimizer", "SearchResult", "ClusterPlan", "populate_cluster",
+    "cost_per_token", "LengthBuckets", "BucketEstimator", "BucketTable",
+    "bucket_table", "workload_histogram", "histogram_cost_per_token",
+    "HistogramCostObjective", "PlacementOptimizer", "SearchResult",
+    "ClusterPlan", "populate_cluster",
 ]

@@ -379,6 +379,8 @@ class PlacementOptimizer:
         if rps <= 0:
             return 0.0
         base = rps / cost if obj.per_cost else rps
+        if obj.tokens_per_req > 0:
+            base *= obj.tokens_per_req
         if obj.gamma == 0.0 or math.isinf(obj.slo_s):
             return base
         violation = max(0.0, e2e / obj.slo_s - 1.0)

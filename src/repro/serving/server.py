@@ -7,6 +7,19 @@ placement). The ``GlobalServer``:
   * dispatches requests weighted-round-robin by pipeline throughput (§3),
     with weights derived from ``core.estimator`` stage latencies when the
     pipeline's ``Placement`` is known (instead of a hardcoded 1.0);
+  * with ``dispatch="throughput"`` or ``"cost"`` (Mélange-style,
+    ``core.buckets``): classifies each request into an
+    (input-len, output-len) bucket and shunts it to the pipeline with the
+    best estimated output tokens/s (throughput policy) or tokens/s per
+    $/hr — i.e. lowest $/token — (cost policy) *for that bucket*, so
+    long-context requests land on high-HBM pipelines instead of
+    collapsing a low-HBM pipeline's Eq. 6 batch bound. The round-robin
+    credit scheme is kept per bucket, so every pipeline with nonzero
+    bucket weight still receives its proportional share (no starvation);
+    a request's bucket is assigned once and preserved across
+    interrupt/requeue (migrated requests carry grown contexts, which must
+    not reclassify them). With prefix sharing on, near-ties break toward
+    a pipeline already holding the request's published prefix;
   * advances the virtual clock by the estimator's bottleneck decode-step
     latency per scheduling round (``tick``), so reported throughput is
     consistent with the simulator instead of a hardcoded 0.01 s/round;
@@ -70,6 +83,7 @@ class ServingPipeline:
     queue: List[ServeRequest] = dataclasses.field(default_factory=list)
     placement: Optional[Any] = None       # core.estimator.Placement
     round_s: float = DEFAULT_ROUND_S      # est. decode-step wall time
+    bucket_tbl: Optional[Any] = None      # core.buckets.BucketTable
 
 
 class GlobalServer:
@@ -82,7 +96,12 @@ class GlobalServer:
                  engine_kw: Optional[Dict] = None,
                  use_kv_migration: bool = False,
                  use_prefix_share: bool = False,
-                 prefix_hot_hits: int = 2):
+                 prefix_hot_hits: int = 2,
+                 dispatch: str = "weighted",
+                 buckets: Optional[Any] = None,
+                 prefix_affinity_frac: float = 0.9):
+        assert dispatch in ("weighted", "uniform", "throughput", "cost"), \
+            dispatch
         self.cfg = cfg
         self.store = store
         self.ft = ft or FTTimes()
@@ -98,6 +117,18 @@ class GlobalServer:
         # when the store lacks the prefix)
         self.use_prefix_share = use_prefix_share
         self.prefix_hot_hits = prefix_hot_hits
+        # dispatch policy: "weighted" — scalar weighted RR (legacy);
+        # "uniform" — every alive pipeline weighted 1.0 (A/B baseline);
+        # "throughput"/"cost" — per-length-bucket weights from the
+        # pipeline's BucketTable (tokens/s, or tokens/s per $/hr)
+        self.dispatch = dispatch
+        if buckets is None:
+            from repro.core.buckets import LengthBuckets
+            buckets = LengthBuckets()
+        self.buckets = buckets
+        # a holder within this fraction of the best bucket weight takes
+        # the request (prefix-affinity tie-breaking)
+        self.prefix_affinity_frac = prefix_affinity_frac
         self.use_concurrent_init = use_concurrent_init
         self.max_batch = max_batch
         self.max_len = max_len
@@ -109,14 +140,27 @@ class GlobalServer:
             self.engine_kw.setdefault("prefix_share", True)
         self.pipelines: List[ServingPipeline] = []
         self.clock = 0.0
-        self._rr_credit: Dict[int, float] = {}
+        # scalar dispatch keys on pid; bucket dispatch on (pid, bucket)
+        self._rr_credit: Dict[Any, float] = {}
+        self._bucket_by_rid: Dict[int, Tuple[int, int]] = {}
+        self._bucket_est: Dict[Any, Any] = {}     # spec -> BucketEstimator
+        self._pipe_engine_kw: Dict[int, Dict] = {}   # pid -> engine_kw
+        # published/warmed shared-prefix token runs -> pids holding them
+        # (the server knows which pipeline published which content-hash
+        # key — prefix-aware dispatch routes a request to a pipeline that
+        # already holds its prefix)
+        self._prefix_home: Dict[Tuple[int, ...], set] = {}
         self.completed: List[ServeRequest] = []
         self.events: List[Tuple[float, str, str]] = []   # (t, kind, detail)
 
     # -- pipeline lifecycle ---------------------------------------------------
-    def _build_engine(self, params: Any) -> Engine:
-        return Engine(self.cfg, params, max_batch=self.max_batch,
-                      max_len=self.max_len, **self.engine_kw)
+    def _build_engine(self, params: Any,
+                      extra_kw: Optional[Dict] = None) -> Engine:
+        kw = dict(self.engine_kw)
+        kw.update(extra_kw or {})
+        mb = kw.pop("max_batch", self.max_batch)
+        ml = kw.pop("max_len", self.max_len)
+        return Engine(self.cfg, params, max_batch=mb, max_len=ml, **kw)
 
     def _estimate_pipeline(self, placement) -> Tuple[float, float]:
         """(dispatch weight, per-round seconds) from the §4.1 estimator's
@@ -131,9 +175,21 @@ class GlobalServer:
         round_s = max(est.decode_stage_s) / s_out
         return max(est.throughput_rps, 1e-9), max(round_s, 1e-6)
 
+    def _bucket_table(self, placement) -> Any:
+        """Per-bucket tokens/s / $-per-token table for a placement, with
+        the bucket estimators shared across every pipeline of the same
+        spec (the prefix-sum tables are the expensive part)."""
+        from repro.core.buckets import BucketEstimator, bucket_table
+        est = self._bucket_est.get(placement.spec)
+        if est is None:
+            est = BucketEstimator(placement.spec, self.buckets)
+            self._bucket_est[placement.spec] = est
+        return bucket_table(placement, est=est)
+
     def add_pipeline(self, params: Any, instance_ids: Sequence[str],
                      weight: Optional[float] = None, partition: str = "full",
-                     placement=None) -> ServingPipeline:
+                     placement=None,
+                     engine_kw: Optional[Dict] = None) -> ServingPipeline:
         if self.store is not None:
             key = f"{partition}/p{len(self.pipelines)}"
             params, cold = self.store.put_or_attach(self.cfg.name, key,
@@ -142,14 +198,22 @@ class GlobalServer:
                 self.events.append((self.clock, "store_load",
                                     f"{self.cfg.name}/{key}"))
         round_s = DEFAULT_ROUND_S
+        bucket_tbl = None
         if placement is not None:
             est_w, round_s = self._estimate_pipeline(placement)
             if weight is None:
                 weight = est_w
-        p = ServingPipeline(len(self.pipelines), self._build_engine(params),
+            if self.dispatch in ("throughput", "cost"):
+                bucket_tbl = self._bucket_table(placement)
+        pid = len(self.pipelines)
+        self._pipe_engine_kw[pid] = dict(engine_kw or {})
+        p = ServingPipeline(pid,
+                            self._build_engine(params,
+                                               self._pipe_engine_kw[pid]),
                             list(instance_ids),
                             1.0 if weight is None else weight,
-                            placement=placement, round_s=round_s)
+                            placement=placement, round_s=round_s,
+                            bucket_tbl=bucket_tbl)
         self.pipelines.append(p)
         self._rr_credit[p.pid] = 0.0
         # a newly-placed pipeline warms its cache from published hot
@@ -158,14 +222,69 @@ class GlobalServer:
         return p
 
     # -- dispatch ---------------------------------------------------------------
+    def bucket_for(self, req: ServeRequest) -> Tuple[int, int]:
+        """The request's length bucket, assigned ONCE on first contact
+        from (prompt len, max output) and preserved across interrupt /
+        preemption requeues — a migrated request's recompute context has
+        grown by its generated tokens, which must not reclassify it."""
+        b = self._bucket_by_rid.get(req.rid)
+        if b is None:
+            b = self.buckets.bucket_of(len(req.prompt), req.max_new_tokens)
+            self._bucket_by_rid[req.rid] = b
+        return b
+
+    def _dispatch_weight(self, p: ServingPipeline,
+                         b: Optional[Tuple[int, int]]) -> float:
+        if self.dispatch == "uniform":
+            return 1.0
+        if b is None or p.bucket_tbl is None:
+            return p.weight
+        return p.bucket_tbl.weight(b[0], b[1], policy=self.dispatch)
+
+    def _prefix_holders(self, prompt: Sequence[int]) -> set:
+        """Pids of pipelines holding a published/warmed shared-prefix run
+        that this prompt extends."""
+        if not self._prefix_home:
+            return set()
+        toks = list(prompt)
+        out: set = set()
+        for run, pids in self._prefix_home.items():
+            if len(run) <= len(toks) and toks[:len(run)] == list(run):
+                out |= pids
+        return out
+
     def submit(self, req: ServeRequest) -> Optional[ServingPipeline]:
         alive = [p for p in self.pipelines if p.alive]
         if not alive:
             return None
+        b = self.bucket_for(req) \
+            if self.dispatch in ("throughput", "cost") else None
+        w = {p.pid: self._dispatch_weight(p, b) for p in alive}
+        if all(v <= 0 for v in w.values()):
+            # the estimator says no alive pipeline can serve this bucket
+            # (or every weight degenerated): fall back to scalar weights —
+            # the request must still be placed somewhere
+            w = {p.pid: max(p.weight, 1e-9) for p in alive}
+        key = (lambda pid: (pid, b)) if b is not None else (lambda pid: pid)
         for p in alive:
-            self._rr_credit[p.pid] += p.weight
-        best = max(alive, key=lambda p: self._rr_credit[p.pid])
-        self._rr_credit[best.pid] -= sum(p.weight for p in alive)
+            self._rr_credit[key(p.pid)] = \
+                self._rr_credit.get(key(p.pid), 0.0) + w[p.pid]
+        best = max(alive, key=lambda p: self._rr_credit[key(p.pid)])
+        if self.use_prefix_share:
+            # tie-break toward a pipeline already holding this prompt's
+            # prefix: a holder within prefix_affinity_frac of the chosen
+            # pipeline's weight skips the prefix recompute entirely, which
+            # is worth a marginal estimated-throughput gap. Credits are
+            # still settled below, so long-run shares stay proportional.
+            holders = self._prefix_holders(req.prompt)
+            if holders and best.pid not in holders:
+                cand = [p for p in alive if p.pid in holders
+                        and w[p.pid] >= self.prefix_affinity_frac
+                        * w[best.pid]]
+                if cand:
+                    best = max(cand,
+                               key=lambda p: self._rr_credit[key(p.pid)])
+        self._rr_credit[key(best.pid)] -= sum(w.values())
         best.queue.append(req)
         return best
 
@@ -197,8 +316,13 @@ class GlobalServer:
             return
         eng = p.engine
         for run in eng.hot_runs(self.prefix_hot_hits):
+            # the run lives in this engine's own index — record the
+            # pipeline as a holder for prefix-affinity dispatch
+            self._prefix_home.setdefault(tuple(run), set()).add(p.pid)
             key = self._prefix_key(self.cfg.name, eng.bm.block_size, run)
-            if self.store.contains(self._PREFIX_MODEL, key):
+            # peek (not contains): an already-published hot prefix counts
+            # as a store HIT, feeding the store's top-k hot-key pinning
+            if self.store.peek(self._PREFIX_MODEL, key) is not None:
                 continue
             payload = eng.export_prefix(run)
             if payload is not None:
@@ -217,6 +341,8 @@ class GlobalServer:
             payload = self.store.peek(model, part)
             if payload is not None and p.engine.warm_prefix(payload):
                 self.events.append((self.clock, "prefix_warm", part))
+                run = tuple(int(t) for t in payload["tokens"])
+                self._prefix_home.setdefault(run, set()).add(p.pid)
 
     def _publish_kv(self, key: str, payload: Dict) -> None:
         """Publish one request's KV payload. Interruption grace-window and
@@ -380,9 +506,13 @@ class GlobalServer:
             p.instance_ids.append(f"{instance_id}/replacement")
             # rebuild engine NOW (attach-only when store present) so tokens
             # keep flowing the moment down_until passes
-            p.engine = self._build_engine(p.engine.params)
-            # the rebuilt engine's cache is cold: re-warm published hot
-            # prefixes so post-revival admissions share instead of recompute
+            p.engine = self._build_engine(
+                p.engine.params, self._pipe_engine_kw.get(p.pid))
+            # the rebuilt engine's cache is cold: it no longer holds any
+            # published prefix (affinity map), and re-warming republishes
+            # what the store still has
+            for pids in self._prefix_home.values():
+                pids.discard(p.pid)
             self._warm_prefixes(p)
         # re-dispatch affected requests to surviving pipelines; if none is
         # alive, requeue on the owner — it revives at down_until, and a

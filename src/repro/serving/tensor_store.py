@@ -44,21 +44,29 @@ class LoadRecord:
 
 class TensorStore:
     def __init__(self, load_time_model: Optional[Callable[[int], float]] = None,
-                 budget_bytes: Optional[int] = None):
+                 budget_bytes: Optional[int] = None,
+                 pin_hot_k: int = 0):
         """load_time_model: bytes -> seconds, used by the virtual clock to
         model remote-storage fetch (paper: custom raw-binary shards so each
         node downloads only its partition). budget_bytes: soft cap enforced
         by LRU eviction of unreferenced keys on every insert (None = no
         cap; referenced keys are never evicted, so the store may exceed the
-        budget while every byte is pinned)."""
+        budget while every byte is pinned). pin_hot_k: budget-capped LRU
+        additionally skips the top-k keys by read-hit count — a hot
+        published prefix is read (``peek``/``attach``) far more often than
+        it is inserted, so pure recency would evict exactly the payload
+        every pipeline warms from (``evict_unreferenced`` still reclaims
+        everything)."""
         self._store: Dict[Key, Any] = {}
         self._refcount: Dict[Key, int] = {}
         self._bytes: Dict[Key, int] = {}
         self._last_used: Dict[Key, int] = {}
+        self._hits: Dict[Key, int] = {}
         self._clock = 0
         self.loads: list[LoadRecord] = []
         self.load_time_model = load_time_model or (lambda nbytes: 0.0)
         self.budget_bytes = budget_bytes
+        self.pin_hot_k = pin_hot_k
 
     # -- internal bookkeeping (single path for every insert/acquire) ------------
     def _touch(self, key: Key) -> None:
@@ -73,8 +81,12 @@ class TensorStore:
         if self.budget_bytes is not None:
             self.evict_to(self.budget_bytes)
 
+    def _hit(self, key: Key) -> None:
+        self._hits[key] = self._hits.get(key, 0) + 1
+
     def _acquire(self, key: Key) -> Any:
         self._refcount[key] += 1
+        self._hit(key)
         self._touch(key)
         return self._store[key]
 
@@ -111,6 +123,7 @@ class TensorStore:
         key = (model, partition)
         if key not in self._store:
             return None
+        self._hit(key)
         self._touch(key)
         return self._store[key]
 
@@ -145,11 +158,26 @@ class TensorStore:
     def refcount(self, model: str, partition: str) -> int:
         return self._refcount.get((model, partition), 0)
 
+    def hits(self, model: str, partition: str) -> int:
+        """Read hits (peek/attach) recorded against a key."""
+        return self._hits.get((model, partition), 0)
+
+    def hot_keys(self) -> list[Key]:
+        """The resident keys pinned by ``pin_hot_k`` (top-k by hit count,
+        hottest first; zero-hit keys never pin)."""
+        if self.pin_hot_k <= 0:
+            return []
+        ranked = sorted(
+            (k for k in self._store if self._hits.get(k, 0) > 0),
+            key=lambda k: (-self._hits[k], -self._last_used[k]))
+        return ranked[:self.pin_hot_k]
+
     def _drop(self, key: Key) -> None:
         self._store.pop(key, None)
         self._refcount.pop(key, None)
         self._bytes.pop(key, None)
         self._last_used.pop(key, None)
+        self._hits.pop(key, None)
 
     def evict_unreferenced(self) -> int:
         """Drop partitions with no attached engine (memory reclamation)."""
@@ -160,11 +188,15 @@ class TensorStore:
 
     def evict_to(self, budget_bytes: int) -> int:
         """LRU-evict unreferenced keys until ``resident_bytes`` fits the
-        budget (referenced keys are pinned and never touched). Returns
-        bytes freed."""
+        budget (referenced keys are pinned and never touched; so are the
+        ``pin_hot_k`` hottest keys by hit count — the budget may stay
+        exceeded rather than evict the prefix every pipeline warms from).
+        Returns bytes freed."""
         freed = 0
         resident = self.resident_bytes()
-        victims = sorted((k for k, c in self._refcount.items() if c == 0),
+        hot = set(self.hot_keys())
+        victims = sorted((k for k, c in self._refcount.items()
+                          if c == 0 and k not in hot),
                          key=lambda k: self._last_used[k])
         for k in victims:
             if resident <= budget_bytes:

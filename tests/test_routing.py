@@ -1,0 +1,314 @@
+"""Length-aware, cost-aware heterogeneous routing: bucket throughput
+tables, the $/token placement objective, bucket-aware dispatch, and
+hot-prefix pinning in the tensor store."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import (BucketEstimator, FastEstimator,
+                        HistogramCostObjective, LengthBuckets, Objective,
+                        Placement, PlacementOptimizer, Stage, bucket_table,
+                        workload_histogram)
+from repro.core.modelspec import uniform_decoder
+from repro.hw.profiles import DeviceProfile, InstanceProfile
+from repro.serving import GlobalServer, ServeRequest, TensorStore
+
+# A spec with real KV pressure: ~0.8 GB of weights, ~33 KB KV per token,
+# so a 1 GB device serves the short bucket but not the long one.
+SPEC = uniform_decoder("route-4l", 4, 2048, 16, 16, 8192, 32000)
+
+
+def _inst(name: str, mem_gb: float, tflops: float, price: float,
+          num_devices: int = 1) -> InstanceProfile:
+    dev = DeviceProfile(f"{name}-dev", mem_gb, tflops * 1e12, 800e9,
+                        5e-6, 32e9)
+    return InstanceProfile(name, dev, num_devices, 5e-5, 25e9 / 8,
+                           price, price * 0.35, name)
+
+
+LOW_HBM = _inst("low-hbm", 1.0, 100, 1.0)       # long bucket infeasible
+HIGH_HBM = _inst("high-hbm", 24.0, 100, 2.0)    # everything fits
+
+
+def _single(spec, inst) -> Placement:
+    return Placement(
+        spec, (Stage(inst, 1, spec.n_layers, first=True, last=True),))
+
+
+# -- bucket tables ----------------------------------------------------------
+
+def test_bucket_table_matches_estimator():
+    """Every bucket-table cell equals a direct FastEstimator.estimate at
+    the bucket's representative point (same engine, no drift)."""
+    bk = LengthBuckets()
+    p = _single(SPEC, HIGH_HBM)
+    tbl = bucket_table(p, buckets=bk)
+    for bi, bo in bk.pairs():
+        s_in, s_out = bk.rep(bi, bo)
+        ref = FastEstimator(SPEC, s_in, s_out).estimate(p)
+        want = ref.throughput_rps * s_out if ref.batch > 0 else 0.0
+        assert tbl.tok_s[bi][bo] == pytest.approx(want, rel=1e-9), (bi, bo)
+        if want > 0:
+            assert tbl.cost_per_token(bi, bo) == pytest.approx(
+                p.price_hr(spot=True) / 3600.0 / want, rel=1e-9)
+        else:
+            assert tbl.cost_per_token(bi, bo) == math.inf
+
+
+def test_low_hbm_long_bucket_infeasible():
+    """The Eq. 6 memory bound zeroes the long bucket on the low-HBM
+    instance while the short bucket stays feasible — the asymmetry
+    bucket-aware routing exploits."""
+    tbl_low = bucket_table(_single(SPEC, LOW_HBM))
+    tbl_high = bucket_table(_single(SPEC, HIGH_HBM))
+    assert tbl_low.tok_s[0][0] > 0            # short/short feasible
+    assert tbl_low.tok_s[-1][-1] == 0.0       # long/long infeasible
+    assert tbl_high.tok_s[-1][-1] > 0
+
+
+def test_workload_histogram_normalized():
+    bk = LengthBuckets()
+    hist = workload_histogram(
+        [(100, 50)] * 3 + [(2000, 1000)] * 1, bk)
+    assert hist[0][0] == pytest.approx(0.75)
+    assert hist[-1][-1] == pytest.approx(0.25)
+    assert sum(map(sum, hist)) == pytest.approx(1.0)
+
+
+# -- $/token objective -------------------------------------------------------
+
+CHEAP = _inst("cheap-slow", 24.0, 50, 1.0)
+FAST = _inst("fast-expensive", 24.0, 500, 30.0)
+
+
+def test_cost_objective_ranks_cheap_above_fast():
+    """The $/token objective prefers the cheap-slow placement; the pure
+    throughput objective prefers the fast-but-expensive one."""
+    hist = workload_histogram([(100, 50)] * 6 + [(1500, 800)] * 4)
+    cost_obj = HistogramCostObjective(hist)
+    p_cheap, p_fast = _single(SPEC, CHEAP), _single(SPEC, FAST)
+    assert cost_obj.score(p_cheap, None) > cost_obj.score(p_fast, None)
+    assert (cost_obj.cost_per_token(p_cheap)
+            < cost_obj.cost_per_token(p_fast))
+
+    tps_obj = Objective(per_cost=False)
+    est = BucketEstimator(SPEC)
+    perf_cheap = est.estimator(2, 2).estimate(p_cheap)
+    perf_fast = est.estimator(2, 2).estimate(p_fast)
+    assert tps_obj.score(p_fast, perf_fast) > tps_obj.score(p_cheap,
+                                                            perf_cheap)
+
+
+def test_optimizer_picks_cheap_mix_under_cost_objective():
+    """PlacementOptimizer consumes the histogram $/token objective
+    (reference scoring path) and answers 'which mix is cheapest': the
+    cheap instance wins the whole pipeline."""
+    hist = workload_histogram([(100, 50)] * 8 + [(1500, 800)] * 2)
+    insts = {CHEAP.name: CHEAP, FAST.name: FAST}
+    inv = {CHEAP.name: 1, FAST.name: 1}
+    opt = PlacementOptimizer(SPEC, inv, insts, 763, 232,
+                             objective=HistogramCostObjective(hist),
+                             beam_k=2, max_stages=2)
+    assert not opt.use_fast                 # subclass -> reference path
+    res = opt.search()
+    assert res.placement is not None
+    used = {s.instance.name for s in res.placement.stages}
+    assert used == {CHEAP.name}
+
+    opt_t = PlacementOptimizer(SPEC, inv, insts, 763, 232,
+                               objective=Objective(per_cost=False),
+                               beam_k=2, max_stages=2)
+    res_t = opt_t.search()
+    assert FAST.name in {s.instance.name for s in res_t.placement.stages}
+
+
+def test_tokens_per_req_fast_reference_equivalence():
+    """Objective(tokens_per_req=...) stays on the fast DP path and matches
+    the reference path exactly (PR-1 equivalence discipline)."""
+    insts = {CHEAP.name: CHEAP, HIGH_HBM.name: HIGH_HBM}
+    inv = {CHEAP.name: 1, HIGH_HBM.name: 1}
+    obj = Objective(tokens_per_req=232.0)
+    fast = PlacementOptimizer(SPEC, inv, insts, 256, 64, objective=obj,
+                              beam_k=2, max_stages=2, use_fast=True,
+                              prune_dominated=False)
+    assert fast.use_fast
+    ref = PlacementOptimizer(SPEC, inv, insts, 256, 64, objective=obj,
+                             beam_k=2, max_stages=2, use_fast=False)
+    rf, rr = fast.search(), ref.search()
+    assert rf.score == pytest.approx(rr.score, rel=1e-6)
+    assert rf.placement.describe() == rr.placement.describe()
+    # tokens_per_req scales the score, never the argmax
+    plain = PlacementOptimizer(SPEC, inv, insts, 256, 64,
+                               objective=Objective(), beam_k=2,
+                               max_stages=2).search()
+    assert rf.score == pytest.approx(plain.score * 232.0, rel=1e-6)
+
+
+# -- bucket-aware dispatch ---------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    from repro.models import build_model
+    m = build_model(cfg, remat=False, attn_chunk=0)
+    return cfg, m.init(jax.random.PRNGKey(0))
+
+
+def _mk_server(cfg, params, dispatch="cost"):
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64,
+                       dispatch=dispatch)
+    p_low = srv.add_pipeline(params, ["low-0"],
+                             placement=_single(SPEC, LOW_HBM))
+    p_high = srv.add_pipeline(params, ["high-0"],
+                              placement=_single(SPEC, HIGH_HBM))
+    return srv, p_low, p_high
+
+
+def _req(s_in, s_out):
+    return ServeRequest(prompt=list(range(1, s_in + 1)),
+                        max_new_tokens=s_out)
+
+
+def test_dispatch_shunts_longs_to_high_hbm(setup):
+    """Long-context requests all land on the high-HBM pipeline (the low
+    one's long-bucket weight is zero); short requests are spread so
+    neither pipeline starves."""
+    cfg, params = setup
+    srv, p_low, p_high = _mk_server(cfg, params, dispatch="cost")
+    longs = [_req(1800, 900) for _ in range(10)]
+    shorts = [_req(60, 30) for _ in range(10)]
+    for r in longs + shorts:
+        srv.submit(r)
+    long_ids = {r.rid for r in longs}
+    assert {r.rid for r in p_low.queue}.isdisjoint(long_ids)
+    assert sum(r.rid in long_ids for r in p_high.queue) == len(longs)
+    # shorts: both pipelines serve some (per-bucket weighted RR)
+    shorts_low = sum(r.rid not in long_ids for r in p_low.queue)
+    shorts_high = sum(r.rid not in long_ids for r in p_high.queue)
+    assert shorts_low > 0 and shorts_high > 0
+    assert shorts_low + shorts_high == len(shorts)
+
+
+def test_uniform_dispatch_ignores_weights(setup):
+    cfg, params = setup
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64,
+                       dispatch="uniform")
+    p0 = srv.add_pipeline(params, ["a"], weight=5.0)
+    p1 = srv.add_pipeline(params, ["b"], weight=1.0)
+    for _ in range(10):
+        srv.submit(ServeRequest(prompt=[1], max_new_tokens=1))
+    assert len(p0.queue) == len(p1.queue) == 5
+
+
+def test_weighted_dispatch_unchanged(setup):
+    """Legacy scalar path is byte-compatible: 3:1 weights -> 30/10."""
+    cfg, params = setup
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64)
+    p0 = srv.add_pipeline(params, ["a"], weight=3.0)
+    p1 = srv.add_pipeline(params, ["b"], weight=1.0)
+    for _ in range(40):
+        srv.submit(ServeRequest(prompt=[1], max_new_tokens=1))
+    assert len(p0.queue) == 30 and len(p1.queue) == 10
+
+
+class _Tbl:
+    """Stub bucket table with hand-set per-bucket weights."""
+
+    def __init__(self, w):
+        self.w = w
+
+    def weight(self, bi, bo, policy="cost", spot=True):
+        return self.w.get((bi, bo), 0.0)
+
+
+def test_requeue_preserves_bucket(setup):
+    """A migrated request keeps its ORIGINAL bucket assignment: its
+    recompute context has grown past the input-bucket edge, and
+    reclassifying would re-route it to the wrong pipeline."""
+    cfg, params = setup
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64, dispatch="cost")
+    p_victim = srv.add_pipeline(params, ["victim-0"])
+    p_short = srv.add_pipeline(params, ["short-0"])
+    p_mid = srv.add_pipeline(params, ["mid-0"])
+    # bucket (0,0) traffic belongs on p_short; bucket (1,0) on p_mid
+    p_victim.bucket_tbl = _Tbl({(0, 0): 0.1, (1, 0): 0.1})
+    p_short.bucket_tbl = _Tbl({(0, 0): 100.0, (1, 0): 0.0})
+    p_mid.bucket_tbl = _Tbl({(0, 0): 0.0, (1, 0): 100.0})
+    # prompt 120 + max_new 60 classifies (0,0); after 40 generated tokens
+    # the recompute context is 160 > the 128 input edge -> (1, 0) if
+    # (wrongly) reclassified
+    r = ServeRequest(prompt=list(range(1, 121)), max_new_tokens=60)
+    b0 = srv.bucket_for(r)
+    assert b0 == (0, 0)
+    p_victim.queue.append(r)          # force-place on the victim
+    r.generated = [7] * 40
+    srv.interrupt_instance("victim-0")
+    assert srv.bucket_for(r) == b0                    # sticky
+    assert r in p_short.queue and r not in p_mid.queue
+
+
+def test_dispatch_falls_back_without_placements(setup):
+    """Bucket policies degrade to scalar weighted RR when no pipeline has
+    a placement (no bucket tables -> scalar weights)."""
+    cfg, params = setup
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64, dispatch="cost")
+    p0 = srv.add_pipeline(params, ["a"], weight=3.0)
+    p1 = srv.add_pipeline(params, ["b"], weight=1.0)
+    for _ in range(40):
+        srv.submit(ServeRequest(prompt=[1], max_new_tokens=1))
+    assert len(p0.queue) == 30 and len(p1.queue) == 10
+
+
+def test_prefix_affinity_tie_break(setup):
+    """With prefix sharing on, a near-tie routes to the pipeline already
+    holding the prompt's published prefix."""
+    cfg, params = setup
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64,
+                       use_prefix_share=False)   # engines plain; map stubbed
+    srv.use_prefix_share = True                  # dispatch-side affinity
+    p0 = srv.add_pipeline(params, ["a"], weight=1.0)
+    p1 = srv.add_pipeline(params, ["b"], weight=1.0)
+    run = (5, 6, 7, 8)
+    srv._prefix_home[run] = {p1.pid}
+    # equal weights: fresh credits would pick p0 (first max); affinity
+    # flips the near-tie to the holder p1
+    r = ServeRequest(prompt=[5, 6, 7, 8, 9, 10], max_new_tokens=4)
+    assert srv.submit(r) is p1
+    # a prompt NOT extending the run is unaffected
+    r2 = ServeRequest(prompt=[9, 9, 9], max_new_tokens=4)
+    assert srv.submit(r2) is p0
+
+
+# -- hot-prefix pinning ------------------------------------------------------
+
+def _payload(n_bytes):
+    return {"w": jnp.zeros((n_bytes // 4,), jnp.float32)}
+
+
+def test_store_pins_hot_prefix():
+    """Budget-capped LRU skips the top-k keys by hit count: the hottest
+    published prefix survives even as the LRU-stalest unreferenced key.
+    Without pinning the same sequence evicts it (regression)."""
+    kb = 1024
+    for pin_k, survives in ((1, True), (0, False)):
+        store = TensorStore(budget_bytes=3 * kb, pin_hot_k=pin_k)
+        store.put("__prefix__", "hot", _payload(kb))
+        for _ in range(5):
+            assert store.peek("__prefix__", "hot") is not None
+        assert store.hits("__prefix__", "hot") == 5
+        # fresher cold keys push "hot" to the LRU-stalest position and
+        # blow the budget on every insert
+        for i in range(4):
+            store.put("__prefix__", f"cold{i}", _payload(kb))
+            store.peek("__prefix__", f"cold{i}")
+        assert store.contains("__prefix__", "hot") == survives
+        assert store.check_consistent()
+        if survives:
+            assert ("__prefix__", "hot") in store.hot_keys()
+            # pinned keys are still reclaimable by full eviction
+            store.evict_unreferenced()
+            assert not store.contains("__prefix__", "hot")

@@ -1,0 +1,45 @@
+"""repro.analysis — repo-specific JAX/Pallas discipline tooling.
+
+Two halves (ISSUE 8):
+
+* ``jaxlint`` — an AST-based static analyzer (stdlib ``ast`` only, no new
+  dependencies) with checks tuned to THIS codebase's invariants: donated
+  jit buffers must never be read after dispatch, hot scheduling loops must
+  not silently sync device values to the host, jit'd callees must not be
+  fed Python-varying shapes outside the blessed bucketing helpers, Pallas
+  call sites must tie their grid/BlockSpec dims to named constants and
+  carry an interpret-mode equivalence test, and jit-traced function bodies
+  must not branch on traced values. Findings are suppressed inline with
+  ``# jaxlint: disable=<check>`` or accepted into a committed baseline
+  file so the CI gate is incremental (only NEW findings fail the build).
+
+  Run it locally::
+
+      PYTHONPATH=src python -m repro.analysis src/
+
+* KV-block sanitizer — a runtime mode of ``serving.kv_blocks.BlockManager``
+  (``BlockManager(sanitize=True)`` or ``REPRO_KV_SANITIZE=1``) that keeps
+  a shadow ledger cross-checked on every reserve/grow/free/COW op, poisons
+  freed blocks with a sentinel, and raises ``KVSanitizerError`` on
+  use-after-free, double-free, refcount underflow, and writes to a shared
+  block — per-op detection instead of end-of-test ``check_no_leak()``.
+"""
+
+from repro.analysis.baseline import load_baseline, write_baseline
+from repro.analysis.jaxlint import (
+    CHECKS,
+    Finding,
+    LintConfig,
+    analyze_file,
+    analyze_paths,
+)
+
+__all__ = [
+    "CHECKS",
+    "Finding",
+    "LintConfig",
+    "analyze_file",
+    "analyze_paths",
+    "load_baseline",
+    "write_baseline",
+]

@@ -94,7 +94,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import build_model
-from repro.serving.kv_blocks import BlockManager
+from repro.serving.kv_blocks import KV_POISON, BlockManager
 from repro.serving.request import ServeRequest
 
 _donation_filter_installed = False
@@ -162,7 +162,8 @@ class Engine:
                  block_size: int = 16, n_blocks: int = 0,
                  kv_alloc: str = "lazy", kv_overcommit: float = 1.0,
                  admit_window: int = 4, prefix_share: bool = False,
-                 grow_ahead: int = 1, admit_headroom: bool = True):
+                 grow_ahead: int = 1, admit_headroom: bool = True,
+                 kv_sanitize: Optional[bool] = None):
         assert admission in ("bucketed", "legacy"), admission
         assert kv_layout in ("auto", "paged", "contig"), kv_layout
         assert kv_alloc in ("lazy", "upfront"), kv_alloc
@@ -213,7 +214,8 @@ class Engine:
             if n_blocks <= 0:
                 n_blocks = max_batch * mb + 1     # capacity-parity + trash
             self.bm = BlockManager(n_blocks, block_size, max_batch, mb,
-                                   overcommit=kv_overcommit)
+                                   overcommit=kv_overcommit,
+                                   sanitize=kv_sanitize)
             self.cache = self.model.init_cache(
                 max_batch, max_len, vector_pos=True, kv_layout="paged",
                 n_blocks=n_blocks, block_size=block_size)
@@ -406,7 +408,23 @@ class Engine:
     def _free_blocks(self, slot: int) -> None:
         if self.bm is not None and self.bm.slot_blocks(slot):
             self.bm.free(slot)
+            self._poison_released()
             self._tbl_dirty = True
+
+    def _poison_released(self) -> None:
+        """Sanitize mode: overwrite the device content of blocks whose
+        last mapping just died with the KV_POISON sentinel — a stale
+        gather through a dangling table entry then produces unmissable
+        garbage instead of silently-plausible old KV. Blocks a prefix
+        index still references are exempt (their content is the warm
+        prefix feature, kept valid until reallocation)."""
+        if self.bm is None or not self.bm.sanitize \
+                or not self.bm.last_released:
+            return
+        ids = jnp.asarray(self.bm.last_released)
+        self.cache["k"] = self.cache["k"].at[:, ids].set(KV_POISON)
+        self.cache["v"] = self.cache["v"].at[:, ids].set(KV_POISON)
+        self.bm.last_released = []
 
     def _sync_block_tbl(self) -> None:
         """Push the host-side block table to the device cache when
@@ -526,6 +544,7 @@ class Engine:
                     if match.boundary in fresh_this_call:
                         cow = (match.boundary, dst)
                     else:
+                        self.bm.note_cow(match.boundary, dst)
                         self.cache = self._cow(self.cache, jnp.asarray(
                             match.boundary), jnp.asarray(dst))
                         self.stats.cow_copies += 1
@@ -581,6 +600,8 @@ class Engine:
         logits, group_cache = self._prefill_b(
             self.params, jnp.asarray(tokens), jnp.asarray(lens - 1))
         self._scatter_group(group_cache, slots, rows, lens)
+        # jaxlint: disable=host-sync -- intended: sampled first tokens
+        # must land on the host to fill req.generated
         first = np.asarray(self.model.sample_greedy(logits))
         self.stats.prefill_batches += 1
         for j, (r, toks, slot) in enumerate(items):
@@ -599,6 +620,7 @@ class Engine:
         slots = np.zeros((g,), np.int32)
         for j, (r, toks, slot, n_sh, cow) in enumerate(items):
             if cow is not None:       # deferred COW: donor prefilled by now
+                self.bm.note_cow(cow[0], cow[1])
                 self.cache = self._cow(self.cache, jnp.asarray(cow[0]),
                                        jnp.asarray(cow[1]))
                 self.stats.cow_copies += 1
@@ -618,6 +640,8 @@ class Engine:
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(bases), jnp.asarray(lens), jnp.asarray(slots),
             jnp.asarray(tbls))
+        # jaxlint: disable=host-sync -- intended: sampled first tokens
+        # must land on the host to fill req.generated
         first = np.asarray(self.model.sample_greedy(logits))
         self.stats.prefill_batches += 1
         for j, (r, toks, slot, n_sh, cow) in enumerate(items):
@@ -724,6 +748,8 @@ class Engine:
             finishers = [(j, m) for j, m in enumerate(grp.members)
                          if not m.done and grp.base >= len(m.tokens)]
             if finishers:
+                # jaxlint: disable=host-sync -- intended: finishers' first
+                # tokens must land on the host to fill req.generated
                 first = np.asarray(self.model.sample_greedy(logits))
                 self._finish_pending(grp, finishers, first)
             if not all(m.done for m in grp.members):
@@ -762,6 +788,7 @@ class Engine:
         payload = self.export_kv(slot)
         self.slots[slot] = None
         self.bm.free(slot)
+        self._poison_released()
         self._tbl_dirty = True
         self.stats.preemptions += 1
         self._preempted.append((req, payload))
@@ -849,10 +876,21 @@ class Engine:
         for i in live:
             tokens[i, 0] = self.slots[i].generated[-1]
             mask[i] = True
+        if self.bm is not None and self.bm.sanitize:
+            for i in live:
+                # this dispatch reads each live slot's KV history and
+                # writes the incoming token at position ctx_len - 1
+                self.bm.check_read(i, self.slots[i].ctx_len - 1)
+                self.bm.check_write(i, self.slots[i].ctx_len - 1,
+                                    self.slots[i].ctx_len)
         self._sync_block_tbl()
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(tokens),
                                           jnp.asarray(mask))
+        # jaxlint: disable=host-sync -- intended: THE per-step sync point.
+        # Sampled tokens feed the next step's host-side scheduling; every
+        # other sync in step() has been eliminated, so the pipeline stalls
+        # exactly once per decode step.
         nxt = np.asarray(self.model.sample_greedy(logits))[:, 0]
         for i in live:
             req = self.slots[i]
@@ -916,7 +954,13 @@ class Engine:
         donor engine's cache state for that request byte-for-byte."""
         assert self.bm is not None, "KV export requires the paged layout"
         if pos is None:
-            pos = int(np.asarray(self.cache["pos"])[slot])
+            # §5.1 invariant: a live, fully-prefilled slot's cache holds
+            # everything but the last generated token, so its position is
+            # ctx_len - 1. Reading it from the request avoids syncing the
+            # device pos array on the dry-pool preemption hot path (the
+            # same identity note_live/import_kv already rely on).
+            pos = self.slots[slot].ctx_len - 1
+        self.bm.check_read(slot, pos)      # no-op unless sanitize mode
         nb = -(-pos // self.bm.block_size) if pos > 0 else 0
         ids = jnp.asarray(self.bm.table[slot, :nb].copy())
         self.stats.kv_exports += 1
@@ -931,8 +975,9 @@ class Engine:
         if self.bm is None:
             return {}
         pend = self._pending_slots()
-        pos_host = np.asarray(self.cache["pos"])
-        return {r.rid: self.export_kv(slot, int(pos_host[slot]))
+        # §5.1 invariant (see export_kv): pos == ctx_len - 1 for every
+        # live, fully-prefilled slot — no device sync needed here either
+        return {r.rid: self.export_kv(slot, r.ctx_len - 1)
                 for slot, r in enumerate(self.slots)
                 if r is not None and slot not in pend}
 

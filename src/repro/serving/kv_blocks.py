@@ -53,20 +53,62 @@ allocates everything up front — the pre-ledger behavior, kept as the
 ``note_live`` records tokens actually written so ``frag_tokens`` reports
 TRUE internal fragmentation (allocated capacity minus live occupancy), not
 the smaller waste-vs-lifetime-reservation number.
+
+SANITIZER MODE (``BlockManager(sanitize=True)`` or ``REPRO_KV_SANITIZE=1``,
+see ``repro.analysis``): the manager keeps a SHADOW ledger — an
+independently-updated mirror of the free set, per-slot mappings, and
+refcounts — cross-checked against the primary structures after every
+``reserve``/``grow``/``free``/warm op, so corruption (tampered refcounts,
+free-list duplicates, table rows diverging from mappings) raises
+``KVSanitizerError`` at the op that caused it instead of failing
+``check_no_leak()`` at end of test. On top of the ledger it detects:
+
+* double-free — ``free(slot)`` on an unmapped slot (the non-sanitizing
+  path deliberately no-ops for engine convenience);
+* refcount underflow — a block's refcount would go negative;
+* use-after-free — ``check_read(slot, n)`` sees a table entry that is
+  TRASH, unmapped, or whose content was released (poisoned);
+* shared-block write — ``check_write(slot, start, end)`` (driven by the
+  ``note_live`` write delta) covers a read-only shared-prefix entry or a
+  block with refcount > 1 (COW should have run first).
+
+``last_released`` lists the blocks whose content died at the most recent
+``free`` (refcount hit 0 and no prefix index references them) — the
+engine overwrites those device blocks with ``KV_POISON`` so any stale
+gather produces blatant garbage. The sentinel is FINITE on purpose:
+masked attention positions get probability exactly 0.0 and ``0.0 * 1e9 ==
+0.0``, so poison is output-neutral for correct code, while NaN would
+propagate through ``p @ v`` even at masked positions.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence
+import os
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
 TRASH_BLOCK = 0
 
+# Poison sentinel for released KV block content (sanitize mode). Finite:
+# masked positions contribute exactly 0.0 * KV_POISON = 0.0, so correct
+# masking hides it, while a genuine stale read is unmissable.
+KV_POISON = 1e9
+
+
+class KVSanitizerError(RuntimeError):
+    """A KV-block invariant was violated (sanitize mode)."""
+
+
+def _env_sanitize() -> bool:
+    return os.environ.get("REPRO_KV_SANITIZE", "0").lower() not in (
+        "", "0", "false", "off")
+
 
 class BlockManager:
     def __init__(self, n_blocks: int, block_size: int, max_slots: int,
-                 max_blocks_per_slot: int, overcommit: float = 1.0):
+                 max_blocks_per_slot: int, overcommit: float = 1.0,
+                 sanitize: Optional[bool] = None):
         assert n_blocks >= 2, "need at least the trash block plus one"
         assert block_size >= 1
         assert overcommit >= 1.0, "overcommit < 1 would idle physical blocks"
@@ -91,6 +133,15 @@ class BlockManager:
         self.on_reuse: Optional[Callable[[int], None]] = None
         self.peak_blocks = 0
         self.grows = 0                        # decode-time block allocations
+        # -- sanitizer shadow ledger (see module docstring) ------------------
+        self.sanitize = _env_sanitize() if sanitize is None else bool(sanitize)
+        self._sh_free: Set[int] = set(self._free)
+        self._sh_borrowed: Set[int] = set()   # warm_blocks .. warm_release
+        self._sh_slots: Dict[int, List[int]] = {}
+        self._sh_shared: Dict[int, int] = {}
+        self._sh_rc: Dict[int, int] = {}
+        self._sh_poison: Set[int] = set()     # released, content dead
+        self.last_released: List[int] = []    # content-dead blocks, last free
 
     # -- sizing -----------------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -161,6 +212,130 @@ class BlockManager:
         its content — re-sharing a warm prefix block."""
         self._free.remove(bid)
 
+    # -- sanitizer (shadow ledger; see module docstring) ------------------------
+    def _sh_take(self, bid: int, op: str) -> None:
+        """Shadow side of a block entering use from the free set."""
+        if bid in self._sh_free:
+            self._sh_free.discard(bid)
+            self._sh_poison.discard(bid)     # about to be overwritten
+        else:
+            raise KVSanitizerError(
+                f"{op}: block {bid} entered use but the shadow ledger "
+                f"does not have it free")
+
+    def _sh_check(self, op: str) -> None:
+        """Cross-check every primary structure against the shadow ledger;
+        any divergence means an op (or outside tampering) corrupted state
+        between the previous check and this one."""
+        if len(set(self._free)) != len(self._free):
+            raise KVSanitizerError(f"{op}: duplicate free-list entries")
+        if set(self._free) != self._sh_free:
+            raise KVSanitizerError(
+                f"{op}: free list diverged from shadow "
+                f"(only-real={sorted(set(self._free) - self._sh_free)}, "
+                f"only-shadow={sorted(self._sh_free - set(self._free))})")
+        if set(self._mapped) != set(self._sh_slots):
+            raise KVSanitizerError(
+                f"{op}: mapped slots diverged from shadow")
+        mapped: Set[int] = set()
+        for s, ids in self._mapped.items():
+            mapped.update(ids)
+            if ids != self._sh_slots[s]:
+                raise KVSanitizerError(
+                    f"{op}: slot {s} mapping diverged from shadow")
+            if self._n_shared[s] != self._sh_shared[s]:
+                raise KVSanitizerError(
+                    f"{op}: slot {s} shared count diverged from shadow")
+            row = self.table[s]
+            if [int(b) for b in row[:len(ids)]] != ids or any(
+                    int(b) != TRASH_BLOCK for b in row[len(ids):]):
+                raise KVSanitizerError(
+                    f"{op}: slot {s} table row diverged from its mapping")
+        every = set(range(TRASH_BLOCK + 1, self.n_blocks))
+        if self._sh_free | mapped | self._sh_borrowed != every \
+                or self._sh_free & mapped:
+            raise KVSanitizerError(
+                f"{op}: blocks leaked or double-owned "
+                f"(free+mapped+borrowed != pool)")
+        if self._sh_poison & mapped:
+            raise KVSanitizerError(
+                f"{op}: poisoned (released) blocks are mapped: "
+                f"{sorted(self._sh_poison & mapped)}")
+        for b in set(self.refcount) | set(self._sh_rc):
+            if self.refcount.get(b, 0) != self._sh_rc.get(b, 0):
+                raise KVSanitizerError(
+                    f"{op}: refcount of block {b} diverged "
+                    f"({self.refcount.get(b, 0)} != shadow "
+                    f"{self._sh_rc.get(b, 0)})")
+
+    def check_read(self, slot: int, n_tokens: int) -> None:
+        """Raise if reading ``slot``'s first ``n_tokens`` would touch a
+        TRASH entry, a block the ledger doesn't map to this slot, or a
+        block whose content was released (use-after-free)."""
+        if not self.sanitize or n_tokens <= 0:
+            return
+        ids = self._mapped.get(slot)
+        if ids is None:
+            raise KVSanitizerError(
+                f"use-after-free: read of unmapped slot {slot}")
+        need = self.blocks_for(n_tokens)
+        if need > len(ids):
+            raise KVSanitizerError(
+                f"read past allocation: slot {slot} covers {len(ids)} "
+                f"block(s) but {n_tokens} tokens need {need}")
+        for i in range(need):
+            bid = int(self.table[slot, i])
+            if bid == TRASH_BLOCK or bid != ids[i]:
+                raise KVSanitizerError(
+                    f"use-after-free: slot {slot} entry {i} reads block "
+                    f"{bid}, ledger maps {ids[i]}")
+            if bid in self._sh_poison or self._sh_rc.get(bid, 0) <= 0:
+                raise KVSanitizerError(
+                    f"use-after-free: slot {slot} entry {i} reads "
+                    f"released block {bid}")
+
+    def check_write(self, slot: int, start: int, end: int) -> None:
+        """Raise if writing tokens ``[start, end)`` of ``slot`` would land
+        in a read-only shared-prefix entry or a block mapped by another
+        slot (refcount > 1 — COW must run first)."""
+        if not self.sanitize or end <= start:
+            return
+        ids = self._mapped.get(slot)
+        if ids is None:
+            raise KVSanitizerError(
+                f"use-after-free: write to unmapped slot {slot}")
+        last = self.blocks_for(end)
+        if last > len(ids):
+            raise KVSanitizerError(
+                f"write past allocation: slot {slot} covers {len(ids)} "
+                f"block(s) but the write ends at token {end}")
+        nsh = self._n_shared.get(slot, 0)
+        for i in range(start // self.block_size, last):
+            bid = ids[i]
+            rc = self._sh_rc.get(bid, 0)
+            if i < nsh:
+                raise KVSanitizerError(
+                    f"write to read-only shared-prefix block {bid} "
+                    f"(slot {slot} entry {i})")
+            if rc > 1 or self.refcount.get(bid, 0) > 1:
+                raise KVSanitizerError(
+                    f"write to shared block {bid} with refcount {rc} "
+                    f"(slot {slot} entry {i}; COW required first)")
+
+    def note_cow(self, src: int, dst: int) -> None:
+        """Record a copy-on-write ``src -> dst``: the source's content
+        must still be valid and the destination must be a private
+        (refcount 1) block."""
+        if not self.sanitize:
+            return
+        if src in self._sh_poison:
+            raise KVSanitizerError(
+                f"COW reads released block {src} (use-after-free)")
+        if self._sh_rc.get(dst, 0) != 1:
+            raise KVSanitizerError(
+                f"COW into block {dst} with refcount "
+                f"{self._sh_rc.get(dst, 0)} != 1")
+
     # -- reserve / grow / free --------------------------------------------------
     def reserve(self, slot: int, n_tokens: int, live_tokens: int = None,
                 shared: Optional[Sequence[int]] = None,
@@ -209,6 +384,21 @@ class BlockManager:
         self.table[slot, :len(ids)] = ids
         self.table[slot, len(ids):] = TRASH_BLOCK
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
+        if self.sanitize:
+            for b in sh:
+                # shared blocks may already be mapped (rc > 0); the ones
+                # reclaimed off the free list leave the shadow free set
+                if self._sh_rc.get(b, 0) == 0:
+                    self._sh_take(b, "reserve")
+                self._sh_rc[b] = self._sh_rc.get(b, 0) + 1
+            for b in fresh:
+                # FRESH blocks must come from the free set, period — a
+                # free-list entry aliasing a mapped block trips here
+                self._sh_take(b, "reserve")
+                self._sh_rc[b] = self._sh_rc.get(b, 0) + 1
+            self._sh_slots[slot] = list(ids)
+            self._sh_shared[slot] = len(sh)
+            self._sh_check("reserve")
         return True
 
     def alloc(self, slot: int, n_tokens: int) -> bool:
@@ -225,6 +415,9 @@ class BlockManager:
         can't cover the REQUIRED part (the caller preempts a victim and
         retries; look-ahead never forces a preemption)."""
         ids = self._mapped.get(slot)
+        if self.sanitize and ids is None:
+            raise KVSanitizerError(
+                f"use-after-free: grow on unmapped slot {slot}")
         assert ids is not None, f"grow on unallocated slot {slot}"
         need = self.blocks_for(n_tokens)
         cap = self._n_shared[slot] + self._reserved[slot]
@@ -244,11 +437,21 @@ class BlockManager:
         self.table[slot, base:base + take] = new
         self.grows += take
         self.peak_blocks = max(self.peak_blocks, self.blocks_in_use())
+        if self.sanitize:
+            for b in new:
+                self._sh_take(b, "grow")
+                self._sh_rc[b] = self._sh_rc.get(b, 0) + 1
+            self._sh_slots[slot].extend(new)
+            self._sh_check("grow")
         return True
 
     def note_live(self, slot: int, n_tokens: int) -> None:
-        """Record tokens actually written to ``slot`` (frag accounting)."""
+        """Record tokens actually written to ``slot`` (frag accounting).
+        In sanitize mode the live-token DELTA is the declared write range,
+        so growing it through a shared block raises."""
         if slot in self._mapped:
+            if self.sanitize and n_tokens > self._live[slot]:
+                self.check_write(slot, self._live[slot], n_tokens)
             self._live[slot] = n_tokens
 
     def free(self, slot: int) -> int:
@@ -256,20 +459,44 @@ class BlockManager:
         row. Shared blocks only return to the pool once their LAST sharer
         frees (refcount 0); returns the number of blocks actually released.
         Released blocks keep their content until reallocated, so a prefix
-        index may go on referencing them (``indexed``)."""
+        index may go on referencing them (``indexed``). Sanitize mode
+        raises on double-free (the plain path deliberately no-ops) and on
+        refcount underflow, and records content-dead releases in
+        ``last_released`` for the engine to poison on device."""
+        if self.sanitize and slot not in self._sh_slots:
+            raise KVSanitizerError(
+                f"double free: slot {slot} has no mapping")
         ids = self._mapped.pop(slot, [])
         self._n_shared.pop(slot, None)
         self._reserved.pop(slot, None)
         self._tokens.pop(slot, None)
         self._live.pop(slot, None)
         released = 0
+        dead: List[int] = []
         for bid in reversed(ids):
+            if self.sanitize:
+                if self.refcount.get(bid, 0) <= 0 \
+                        or self._sh_rc.get(bid, 0) <= 0:
+                    raise KVSanitizerError(
+                        f"refcount underflow on block {bid} freeing "
+                        f"slot {slot}")
+                self._sh_rc[bid] -= 1
+                if self._sh_rc[bid] == 0:
+                    self._sh_free.add(bid)
+                    if bid not in self.indexed:
+                        self._sh_poison.add(bid)
+                        dead.append(bid)
             self.refcount[bid] -= 1
             assert self.refcount[bid] >= 0, f"refcount underflow on {bid}"
             if self.refcount[bid] == 0:
                 self._free.append(bid)
                 released += 1
         self.table[slot, :] = TRASH_BLOCK
+        if self.sanitize:
+            self._sh_slots.pop(slot)
+            self._sh_shared.pop(slot)
+            self.last_released = dead
+            self._sh_check("free")
         return released
 
     def free_all(self) -> None:
@@ -285,12 +512,29 @@ class BlockManager:
         reduces usable capacity."""
         if n <= 0 or n > len(self._free):
             return None
-        return [self._pop_free() for _ in range(n)]
+        ids = [self._pop_free() for _ in range(n)]
+        if self.sanitize:
+            for b in ids:
+                self._sh_take(b, "warm_blocks")
+                self._sh_borrowed.add(b)
+            self._sh_check("warm_blocks")
+        return ids
 
     def warm_release(self, ids: Sequence[int]) -> None:
         """Return warm blocks to the BOTTOM of the LIFO free list so they
         are overwritten last."""
+        if self.sanitize:
+            for b in ids:                     # validate BEFORE mutating
+                if b not in self._sh_borrowed:
+                    raise KVSanitizerError(
+                        f"warm_release of non-borrowed block {b}")
         self._free[:0] = list(ids)
+        if self.sanitize:
+            for b in ids:
+                self._sh_borrowed.discard(b)
+                self._sh_free.add(b)
+                self._sh_poison.discard(b)    # warm content is valid
+            self._sh_check("warm_release")
 
     # -- introspection ----------------------------------------------------------
     def slot_blocks(self, slot: int) -> List[int]:

@@ -14,7 +14,13 @@ Structure — a radix tree over BLOCK-ALIGNED runs, stored flat:
 * ``_partial``: tuple(full-block prefix) -> [(block id, tail tokens)] for
   prompts whose last block is only partially filled. A partial match is
   shared by COPY-ON-WRITE: the matching block is copied into the new
-  slot's first fresh block before any divergent write lands.
+  slot's first fresh block before any divergent write lands. At most
+  ``max_partials`` divergent tails are kept per aligned prefix; under cap
+  pressure the COLDEST tail is evicted — fewest boundary-match hits,
+  least-recently-used as the tie-break — so the hot tail survives however
+  many one-off suffixes share its boundary block (hit-count LRU; the old
+  FIFO evicted the hottest tail first precisely because it arrived
+  first).
 
 Indexed blocks may be LIVE (mapped by slots) or FREE (their owners
 finished; content stays valid until the block manager reallocates them —
@@ -59,6 +65,10 @@ class PrefixIndex:
         # block id -> entries referencing it, for O(1) invalidation
         self._rev: Dict[int, List[Tuple]] = {}
         self.hits: Dict[TokenRun, int] = {}
+        # (pkey, tail) -> [boundary hits, last-touched tick] driving the
+        # hit-count LRU eviction of partial entries
+        self._pstat: Dict[Tuple[TokenRun, TokenRun], List[int]] = {}
+        self._tick = 0
 
     def __len__(self) -> int:
         return len(self._full) + sum(len(v) for v in self._partial.values())
@@ -91,12 +101,31 @@ class PrefixIndex:
             entries = self._partial.setdefault(pkey, [])
             bid = int(block_ids[n_full])
             if any(t == tail for _, t in entries):
+                # duplicate tail re-inserted: evidence of reuse — bump it
+                # so it outlives colder tails under cap pressure
+                self._pbump(pkey, tail, hit=True)
                 return
             if len(entries) >= self.max_partials:
-                old_bid, old_tail = entries.pop(0)
+                # hit-count LRU: evict the tail with the fewest boundary
+                # hits, least-recently-touched as the tie-break
+                old_bid, old_tail = min(
+                    entries,
+                    key=lambda e: tuple(self._pstat.get((pkey, e[1]),
+                                                        [0, 0])))
+                entries.remove((old_bid, old_tail))
+                self._pstat.pop((pkey, old_tail), None)
                 self._unlink(old_bid, ("p", pkey, old_tail))
             entries.append((bid, tail))
+            self._pbump(pkey, tail, hit=False)
             self._link(bid, ("p", pkey, tail))
+
+    def _pbump(self, pkey: TokenRun, tail: TokenRun, hit: bool) -> None:
+        """Touch a partial entry's LRU stat (optionally counting a hit)."""
+        self._tick += 1
+        st = self._pstat.setdefault((pkey, tail), [0, 0])
+        if hit:
+            st[0] += 1
+        st[1] = self._tick
 
     # -- match ------------------------------------------------------------------
     def match(self, toks: Sequence[int]) -> Optional[PrefixMatch]:
@@ -114,16 +143,19 @@ class PrefixIndex:
                 break
             full_ids.append(bid)
             covered += bs
-        boundary, btoks = None, 0
-        for bid, tail in self._partial.get(tuple(toks[:covered]), []):
+        boundary, btoks, btail = None, 0, None
+        pkey = tuple(toks[:covered])
+        for bid, tail in self._partial.get(pkey, []):
             t = 0
             cap = min(len(tail), limit - covered)
             while t < cap and tail[t] == toks[covered + t]:
                 t += 1
             if t > btoks:
-                boundary, btoks = bid, t
+                boundary, btoks, btail = bid, t, tail
         if covered == 0 and btoks == 0:
             return None
+        if btail is not None:
+            self._pbump(pkey, btail, hit=True)
         if full_ids:
             self.hits[tuple(toks[:covered])] += 1
         return PrefixMatch(covered + btoks, full_ids, boundary, btoks)
@@ -170,6 +202,7 @@ class PrefixIndex:
                          if len(pk) >= len(key) and pk[:len(key)] == key]
                 for pk in deadp:
                     for b2, tail in self._partial.pop(pk):
+                        self._pstat.pop((pk, tail), None)
                         self._unlink(b2, ("p", pk, tail))
             else:
                 _, pkey, tail = entry
@@ -179,6 +212,7 @@ class PrefixIndex:
                                   if not (b == bid and t == tail)]
                     if not entries:
                         del self._partial[pkey]
+                self._pstat.pop((pkey, tail), None)
         self.bm.indexed.discard(bid)
 
     # -- hot runs (cluster warm-up) ---------------------------------------------

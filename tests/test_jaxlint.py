@@ -1,0 +1,349 @@
+"""jaxlint fixture tests (ISSUE 8): every check has a known-bad snippet
+that must flag and a known-good snippet that must pass, plus suppression,
+baseline round-trip / line-drift stability, and the repo gate (the
+committed baseline keeps `python -m repro.analysis src/` at exit 0)."""
+
+import pathlib
+import textwrap
+
+from repro.analysis import (
+    CHECKS,
+    LintConfig,
+    analyze_file,
+    analyze_paths,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.__main__ import main as jaxlint_main
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _lint(tmp_path, src, config=None, tests_blob=""):
+    p = tmp_path / "mod.py"
+    p.write_text(textwrap.dedent(src))
+    return analyze_file(str(p), config or LintConfig(),
+                        tests_blob=tests_blob)
+
+
+def _checks(findings):
+    return {f.check for f in findings}
+
+
+# -- donated-use ---------------------------------------------------------------
+
+def test_donated_use_flags_read_after_dispatch(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def make(f):
+            g = jax.jit(f, donate_argnums=(0,))
+
+            def run(cache, tok):
+                out = g(cache, tok)
+                return out, cache["k"]
+            return run
+        """)
+    assert _checks(fs) == {"donated-use"}
+    assert "donated to `g`" in fs[0].message
+
+
+def test_donated_use_flags_same_statement_reuse(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def make(f):
+            g = jax.jit(f, donate_argnums=(0,))
+
+            def run(x):
+                return g(x) + x
+            return run
+        """)
+    assert _checks(fs) == {"donated-use"}
+
+
+def test_donated_use_passes_rebinding_idiom(tmp_path):
+    # the engine's idiom: the dispatch statement rebinds the donated name
+    fs = _lint(tmp_path, """
+        import jax
+
+        def make(f):
+            g = jax.jit(f, donate_argnums=(1,))
+
+            def run(params, cache, tok):
+                logits, cache = g(params, cache, tok)
+                return logits, cache["pos"]
+            return run
+        """)
+    assert fs == []
+
+
+def test_donated_use_passes_later_rebind_then_read(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        def make(f):
+            g = jax.jit(f, donate_argnums=(0,))
+
+            def run(cache, tok):
+                out = g(cache, tok)
+                cache = out["cache"]
+                return cache["k"]
+            return run
+        """)
+    assert fs == []
+
+
+# -- host-sync -----------------------------------------------------------------
+
+_HOT = LintConfig(hot_functions=(r"^hot$",))
+
+
+def test_host_sync_flags_hot_path_syncs(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def hot(x, vals):
+            a = np.asarray(x)
+            b = x.item()
+            c = int(vals[0])
+            return a, b, c
+        """, config=_HOT)
+    assert _checks(fs) == {"host-sync"} and len(fs) == 3
+
+
+def test_host_sync_passes_host_literals_and_cold_paths(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def hot(ms):
+            slots = np.array([m.slot for m in ms], np.int32)
+            n = int(len(ms))
+            return slots, n
+
+        def cold(x):
+            return np.asarray(x)
+        """, config=_HOT)
+    assert fs == []
+
+
+# -- retrace -------------------------------------------------------------------
+
+def test_retrace_flags_varying_slice_into_jit(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+        import jax.numpy as jnp
+
+        def make(f):
+            g = jax.jit(f)
+
+            def caller(payload, n):
+                return g(jnp.asarray(payload[:, :n]))
+            return caller
+        """)
+    assert _checks(fs) == {"retrace"}
+
+
+def test_retrace_passes_constant_slices_and_blessed(tmp_path):
+    src = """
+        import jax
+
+        def make(f):
+            g = jax.jit(f)
+
+            def caller(payload, n):
+                return g(payload[:, :8])
+            return caller
+        """
+    assert _lint(tmp_path, src) == []
+    varying = src.replace(":8]", ":n]")
+    assert _checks(_lint(tmp_path, varying)) == {"retrace"}
+    blessed = LintConfig(blessed_retrace=(r"caller$",))
+    assert _lint(tmp_path, varying, config=blessed) == []
+
+
+# -- pallas-grid ---------------------------------------------------------------
+
+def test_pallas_grid_flags_magic_numbers(tmp_path):
+    fs = _lint(tmp_path, """
+        from jax.experimental import pallas as pl
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x, interpret=False):
+            return pl.pallas_call(
+                kern,
+                grid=(8, 128),
+                in_specs=[pl.BlockSpec((1, 128), lambda i, j: (i, j))],
+                interpret=interpret,
+            )(x)
+        """, tests_blob="run(x)")
+    assert _checks(fs) == {"pallas-grid"}
+    assert len(fs) == 3                    # 8, 128 in grid; 128 in spec
+
+
+def test_pallas_grid_passes_named_constants(tmp_path):
+    fs = _lint(tmp_path, """
+        from jax.experimental import pallas as pl
+
+        B = 8
+        N = 128
+
+        def kern(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def run(x, interpret=False):
+            return pl.pallas_call(
+                kern,
+                grid=(B, N),
+                in_specs=[pl.BlockSpec((1, N), lambda i, j: (i, j))],
+                interpret=interpret,
+            )(x)
+        """, tests_blob="run(x)")
+    assert fs == []
+
+
+# -- pallas-test ---------------------------------------------------------------
+
+_PALLAS_WRAPPER = """
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def run(x{sig}):
+        return pl.pallas_call(kern, grid=(1,){kw})(x)
+    """
+
+
+def test_pallas_test_flags_missing_interpret_and_coverage(tmp_path):
+    src = _PALLAS_WRAPPER.format(sig="", kw="")
+    fs = _lint(tmp_path, src, tests_blob="something_else()")
+    msgs = " ".join(f.message for f in fs)
+    assert _checks(fs) == {"pallas-test"} and len(fs) == 2
+    assert "interpret" in msgs and "not referenced" in msgs
+
+
+def test_pallas_test_passes_covered_wrapper(tmp_path):
+    src = _PALLAS_WRAPPER.format(sig=", interpret=False",
+                                 kw=", interpret=interpret")
+    fs = _lint(tmp_path, src, tests_blob="assert run(x) == ref")
+    assert fs == []
+
+
+# -- traced-flow ---------------------------------------------------------------
+
+def test_traced_flow_flags_branch_and_concretize(tmp_path):
+    fs = _lint(tmp_path, """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+
+        @jax.jit
+        def h(x):
+            return int(x)
+        """)
+    assert _checks(fs) == {"traced-flow"} and len(fs) == 2
+
+
+def test_traced_flow_passes_static_args_and_none_checks(tmp_path):
+    fs = _lint(tmp_path, """
+        import functools
+
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def g(x, n):
+            if n > 4:
+                return x[:4]
+            return x
+
+        @jax.jit
+        def k(x, opt=None):
+            if opt is None:
+                return x
+            return x + opt
+        """)
+    assert fs == []
+
+
+# -- suppression / baseline ----------------------------------------------------
+
+def test_inline_and_preceding_comment_suppression(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def hot(x, y):
+            a = np.asarray(x)  # jaxlint: disable=host-sync -- intended
+            # jaxlint: disable=host-sync -- comment-line form
+            b = np.asarray(y)
+            return a, b
+        """, config=_HOT)
+    assert fs == []
+
+
+def test_suppression_is_check_specific(tmp_path):
+    fs = _lint(tmp_path, """
+        import numpy as np
+
+        def hot(x):
+            return np.asarray(x)  # jaxlint: disable=retrace -- wrong check
+        """, config=_HOT)
+    assert _checks(fs) == {"host-sync"}
+
+
+def test_baseline_roundtrip_and_line_drift_stability(tmp_path):
+    src = """
+        import numpy as np
+
+        def hot(x):
+            return np.asarray(x)
+        """
+    fs = _lint(tmp_path, src, config=_HOT)
+    assert len(fs) == 1
+    bl = tmp_path / "baseline"
+    assert write_baseline(str(bl), fs) == 1
+    assert load_baseline(str(bl)) == {fs[0].fingerprint}
+    # unrelated edits above the finding must not rotate the fingerprint
+    drifted = textwrap.dedent(src).replace(
+        "import numpy as np", "import os\n\nimport numpy as np")
+    (tmp_path / "mod.py").write_text(drifted)
+    fs2 = analyze_file(str(tmp_path / "mod.py"), _HOT, tests_blob="")
+    assert fs2[0].line != fs[0].line
+    assert fs2[0].fingerprint == fs[0].fingerprint
+
+
+def test_every_check_has_catalogue_entry():
+    assert set(CHECKS) == {"donated-use", "host-sync", "retrace",
+                           "pallas-grid", "pallas-test", "traced-flow"}
+
+
+# -- repo gate -----------------------------------------------------------------
+
+def test_repo_is_clean_against_committed_baseline():
+    """The committed baseline covers every finding on src/ — the CI
+    analysis job runs exactly this gate."""
+    cfg = LintConfig(tests_dir=str(ROOT / "tests"))
+    findings = analyze_paths([str(ROOT / "src")], cfg)
+    accepted = load_baseline(str(ROOT / ".jaxlint-baseline"))
+    fresh = [f for f in findings if f.fingerprint not in accepted]
+    assert fresh == [], "\n".join(f.render() for f in fresh)
+    # and the baseline carries no stale (already-fixed) entries
+    assert accepted <= {f.fingerprint for f in findings}
+
+
+def test_cli_exit_codes(capsys):
+    rc = jaxlint_main([str(ROOT / "src"),
+                       "--baseline", str(ROOT / ".jaxlint-baseline"),
+                       "--tests-dir", str(ROOT / "tests"),
+                       "--fail-on-stale"])
+    assert rc == 0
+    assert jaxlint_main(["--list-checks"]) == 0
+    assert jaxlint_main(["--select", "nope"]) == 2
+    out = capsys.readouterr().out
+    assert "donated-use" in out

@@ -161,6 +161,35 @@ def test_index_invalidation_drops_deeper_runs():
     assert ids[1] not in bm.indexed
 
 
+def test_partial_lru_keeps_hot_tail_under_cap_pressure():
+    """Hit-count LRU partial eviction (ISSUE 8 satellite): a repeatedly
+    matched boundary tail survives a stream of one-off tails past the
+    ``max_partials`` cap — the old FIFO evicted the hot tail first
+    precisely because it arrived first."""
+    bm = BlockManager(n_blocks=32, block_size=4, max_slots=16,
+                      max_blocks_per_slot=8)
+    idx = PrefixIndex(4, bm, max_partials=2)
+    base = [1, 2, 3, 4]                            # one full block
+    assert bm.reserve(0, 6)
+    idx.insert(base + [7, 8], bm.slot_blocks(0))   # hot tail (7, 8)
+    hot_bid = bm.slot_blocks(0)[1]
+    for _ in range(3):                             # heat it up
+        m = idx.match(base + [7, 8, 9])
+        assert m.boundary == hot_bid and m.boundary_tokens == 2
+    # cap pressure: four distinct one-off tails churn through the cap
+    for i in range(1, 5):
+        assert bm.reserve(i, 6)
+        idx.insert(base + [30 + i, 40 + i], bm.slot_blocks(i))
+    assert len(idx._partial[tuple(base)]) == 2     # cap still enforced
+    m = idx.match(base + [7, 8, 9])                # hot tail survived
+    assert m is not None and m.boundary == hot_bid and m.boundary_tokens == 2
+    # duplicate re-insert counts as reuse evidence, not a new entry
+    assert bm.reserve(5, 6)
+    idx.insert(base + [7, 8], bm.slot_blocks(5))
+    assert len(idx._partial[tuple(base)]) == 2
+    assert idx.match(base + [7, 8, 9]).boundary == hot_bid
+
+
 # -- engine: byte-identity, COW, survival --------------------------------------
 
 def _share_pair(cfg, params, prompts, max_new=4, **kw):

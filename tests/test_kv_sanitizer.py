@@ -1,0 +1,229 @@
+"""KV-block sanitizer (ISSUE 8): the shadow ledger must catch injected
+double-frees, refcount underflow, use-after-free reads, shared-block
+writes, and outside tampering at the op that caused them, while a fully
+sanitized engine run stays byte-identical to a plain one (the freed-block
+poison sentinel is output-neutral under correct masking)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, ServeRequest
+from repro.serving.kv_blocks import (
+    KV_POISON,
+    BlockManager,
+    KVSanitizerError,
+)
+
+
+def _params_for(cfg):
+    m = build_model(cfg, remat=False, attn_chunk=0)
+    return m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    return cfg, _params_for(cfg)
+
+
+def _bm(**kw):
+    kw.setdefault("n_blocks", 9)
+    kw.setdefault("block_size", 4)
+    kw.setdefault("max_slots", 4)
+    kw.setdefault("max_blocks_per_slot", 6)
+    kw.setdefault("sanitize", True)
+    return BlockManager(**kw)
+
+
+# -- mode selection ------------------------------------------------------------
+
+def test_env_var_enables_sanitizer(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_SANITIZE", "1")
+    assert BlockManager(4, 4, 2, 2).sanitize
+    monkeypatch.setenv("REPRO_KV_SANITIZE", "0")
+    assert not BlockManager(4, 4, 2, 2).sanitize
+    # explicit argument beats the environment
+    assert BlockManager(4, 4, 2, 2, sanitize=True).sanitize
+
+
+# -- injected bug classes ------------------------------------------------------
+
+def test_double_free_raises():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    bm.free(0)
+    with pytest.raises(KVSanitizerError, match="double free"):
+        bm.free(0)
+
+
+def test_plain_mode_double_free_still_noops():
+    # the non-sanitizing path keeps the engine-friendly no-op contract
+    bm = _bm(sanitize=False)
+    assert bm.reserve(0, 8)
+    bm.free(0)
+    assert bm.free(0) == 0
+    assert bm.check_no_leak()
+
+
+def test_refcount_underflow_raises():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    bm.refcount[bm.slot_blocks(0)[0]] -= 1        # tamper
+    with pytest.raises(KVSanitizerError, match="underflow"):
+        bm.free(0)
+
+
+def test_use_after_free_read_raises():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    bm.check_read(0, 8)                           # mapped: fine
+    bm.free(0)
+    with pytest.raises(KVSanitizerError, match="use-after-free"):
+        bm.check_read(0, 8)
+
+
+def test_dangling_table_entry_raises():
+    bm = _bm()
+    assert bm.reserve(0, 8) and bm.reserve(1, 8)
+    dead = bm.slot_blocks(1)[0]
+    bm.free(1)
+    bm.table[0, 0] = dead                         # injected dangling ref
+    with pytest.raises(KVSanitizerError, match="use-after-free"):
+        bm.check_read(0, 8)
+
+
+def test_shared_block_write_raises():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    donor = bm.slot_blocks(0)
+    assert bm.reserve(1, 12, shared=donor)
+    # sharer writing into its read-only shared prefix
+    with pytest.raises(KVSanitizerError, match="read-only shared-prefix"):
+        bm.check_write(1, 0, 4)
+    # donor writing its own block while refcount > 1 (COW hazard)
+    with pytest.raises(KVSanitizerError, match="COW required"):
+        bm.check_write(0, 0, 4)
+    bm.check_write(1, 8, 12)                      # fresh region: fine
+    bm.free(1)
+    bm.check_write(0, 0, 4)                       # last sharer: fine again
+
+
+def test_note_live_delta_drives_write_check():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    donor = bm.slot_blocks(0)
+    assert bm.reserve(1, 12, live_tokens=8, shared=donor)
+    assert bm.grow(1, 12)
+    bm.note_live(1, 12)                           # fresh block: fine
+    bm._live[1] = 4                               # tamper live watermark
+    with pytest.raises(KVSanitizerError, match="shared"):
+        bm.note_live(1, 8)                        # delta covers shared blk
+
+
+def test_note_cow_validates_source_and_destination():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    donor = bm.slot_blocks(0)
+    assert bm.reserve(1, 12, shared=donor)
+    fresh = bm.slot_blocks(1)[2]
+    bm.note_cow(donor[1], fresh)                  # valid: rc-1 dest
+    with pytest.raises(KVSanitizerError, match="refcount"):
+        bm.note_cow(donor[1], donor[0])           # dest shared (rc 2)
+
+
+def test_crosscheck_detects_free_list_tampering():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    bm._free.append(bm.slot_blocks(0)[0])         # block free AND mapped
+    with pytest.raises(KVSanitizerError, match="shadow ledger"):
+        bm.reserve(1, 4)
+
+
+def test_crosscheck_detects_refcount_tampering():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    bm.refcount[bm.slot_blocks(0)[0]] += 1        # tamper upward
+    with pytest.raises(KVSanitizerError, match="refcount .* diverged"):
+        bm.reserve(1, 4)
+
+
+def test_released_blocks_reported_for_poisoning():
+    bm = _bm()
+    assert bm.reserve(0, 8)
+    ids = bm.slot_blocks(0)
+    bm.indexed.add(ids[0])                        # prefix index holds blk 0
+    bm.free(0)
+    # only the un-indexed block's content is dead (warm prefix survives)
+    assert bm.last_released == [ids[1]]
+    # reusing the dead block clears its poison
+    assert bm.reserve(1, 8)
+    bm.check_read(1, 8)
+
+
+def test_warm_cycle_is_sanitizer_clean():
+    bm = _bm()
+    ids = bm.warm_blocks(2)
+    assert ids is not None
+    with pytest.raises(KVSanitizerError, match="non-borrowed"):
+        bm.warm_release([7 if 7 not in ids else 6])
+    bm.warm_release(ids)
+    assert bm.reserve(0, 8)
+    bm.free(0)
+
+
+# -- engine integration --------------------------------------------------------
+
+def test_sanitized_engine_byte_identical_with_churn(setup):
+    """Full engine run (grows, preemptions, KV re-attach) under the
+    sanitizer: no false positives, outputs byte-identical to plain mode —
+    proving the device poison writes are output-neutral."""
+    cfg, params = setup
+
+    def run(sanitize):
+        eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                     n_blocks=13, kv_overcommit=2.0, kv_sanitize=sanitize)
+        rng = np.random.RandomState(11)
+        reqs = [ServeRequest(
+            prompt=rng.randint(0, cfg.vocab, rng.randint(3, 30)).tolist(),
+            max_new_tokens=int(rng.randint(2, 12))) for _ in range(8)]
+        queue = list(reqs)
+        for _ in range(400):
+            if not (queue or eng.active() or eng._pending
+                    or eng._preempted):
+                break
+            if queue:
+                adm = eng.admit_many(queue[:2])
+                taken = {id(r) for r in adm}
+                queue = [r for r in queue if id(r) not in taken]
+            eng.step()
+            for req, _ in eng.take_preempted():
+                queue.insert(0, req)
+        assert all(r.done for r in reqs)
+        return [r.generated for r in reqs], eng
+
+    plain, _ = run(False)
+    sanitized, eng = run(True)
+    assert sanitized == plain
+    assert eng.stats.preemptions >= 1             # poison path exercised
+
+
+def test_engine_step_catches_freed_blocks_behind_its_back(setup):
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, block_size=8,
+                 kv_sanitize=True)
+    req = ServeRequest(prompt=[1, 2, 3, 4], max_new_tokens=8)
+    assert eng.admit(req)
+    eng.step()
+    slot = next(i for i, r in enumerate(eng.slots) if r is req)
+    eng.bm.free(slot)                             # inject: yank the blocks
+    with pytest.raises(KVSanitizerError, match="use-after-free"):
+        eng.step()
+
+
+def test_poison_sentinel_is_finite():
+    # NaN would propagate through p @ v even at masked positions; the
+    # sentinel must be finite so 0-probability positions contribute 0.0
+    assert np.isfinite(KV_POISON) and KV_POISON >= 1e6

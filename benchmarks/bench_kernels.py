@@ -1,0 +1,144 @@
+"""Hot-path kernel benchmarks — flash paged chunk-prefill + paged decode.
+
+Two questions, answered on whatever backend runs this:
+
+  * raw op throughput: tokens/s of the paged chunk-attention and paged
+    decode dispatches, jnp oracle vs the Pallas kernel.  On CPU the
+    kernel runs in *interpret* mode (``interp=1`` in the derived row) —
+    a correctness proxy, orders of magnitude off its compiled speed — so
+    check_smoke.py enforces the ``speedup >= 1x`` floor only when
+    ``interp=0`` (a real accelerator).  The oracle tok/s floors ARE
+    CPU-enforceable and protect against dispatch-path bloat.
+  * dispatch-count reduction of direct-to-pool chunked prefill: the
+    contig baseline pays one terminal scatter per finished group on top
+    of its chunk dispatches; the paged engine writes chunks straight
+    into pool blocks (``chunk_direct``) and scatters never.  The counts
+    are deterministic, so the reduction ratio is baseline-tracked.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Rows, full_mode, save_json
+from repro.configs import get_config
+from repro.kernels import ops as kops
+from repro.models import attention as mattn
+from repro.models import build_model
+from repro.serving import Engine, ServeRequest
+
+# engine-scale shapes (a reduced-config chunk group); REPRO_FULL widens
+B, C, NH, NKV, D = (4, 128, 8, 2, 64) if full_mode() else (2, 64, 4, 2, 64)
+BLOCK, MB = (16, 32) if full_mode() else (16, 16)   # virtual len = BLOCK*MB
+ITERS = 5
+
+
+def _time(fn, *args):
+    out = fn(*args)
+    jax.block_until_ready(out)                       # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / ITERS
+
+
+def _paged_operands(rng):
+    n_blocks = 1 + B * MB
+    pk = jnp.asarray(rng.randn(n_blocks, BLOCK, NKV, D), jnp.float32)
+    pv = jnp.asarray(rng.randn(n_blocks, BLOCK, NKV, D), jnp.float32)
+    tbl = jnp.asarray(rng.permutation(B * MB).reshape(B, MB) + 1, jnp.int32)
+    return pk, pv, tbl
+
+
+def _chunk_ab(rng) -> Dict:
+    """Paged chunk-attention: jnp gather oracle vs the scalar-prefetch
+    Pallas kernel, tokens/s per dispatch."""
+    pk, pv, tbl = _paged_operands(rng)
+    q = jnp.asarray(rng.randn(B, C, NH, D), jnp.float32)
+    base = jnp.asarray(BLOCK * MB - C, jnp.int32)
+    q_pos = (jnp.broadcast_to(base, (B,))[:, None]
+             + jnp.arange(C)[None]).astype(jnp.int32)
+    oracle = jax.jit(
+        lambda q, k, v, t, p: mattn.chunk_attention_paged(q, k, v, t, p))
+    t_jnp = _time(oracle, q, pk, pv, tbl, q_pos)
+    t_pal = _time(kops.chunk_attention_paged, q, pk, pv, tbl, base)
+    return {"jnp_tok_s": B * C / t_jnp, "pallas_tok_s": B * C / t_pal,
+            "jnp_s": t_jnp, "pallas_s": t_pal, "speedup": t_jnp / t_pal}
+
+
+def _decode_ab(rng) -> Dict:
+    """Paged decode: jnp gather oracle vs the block-table kernel."""
+    pk, pv, tbl = _paged_operands(rng)
+    q = jnp.asarray(rng.randn(B, 1, NH, D), jnp.float32)
+    pos = jnp.asarray([BLOCK * MB - 1] * B, jnp.int32)
+    oracle = jax.jit(
+        lambda q, k, v, t, p: mattn.decode_attention_paged(q, k, v, t, p))
+    t_jnp = _time(oracle, q, pk, pv, tbl, pos)
+    t_pal = _time(kops.decode_attention_paged, q, pk, pv, tbl, pos)
+    return {"jnp_tok_s": B / t_jnp, "pallas_tok_s": B / t_pal,
+            "jnp_s": t_jnp, "pallas_s": t_pal, "speedup": t_jnp / t_pal}
+
+
+def _dispatch_counts() -> Dict:
+    """Deterministic A/B: chunk dispatches + terminal scatters on the same
+    staggered workload, contig (transient cache + scatter) vs paged
+    (direct in-place writes)."""
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg, remat=False, attn_chunk=0)
+    params = model.init(jax.random.PRNGKey(0))
+    outs, stats = {}, {}
+    for layout in ("contig", "paged"):
+        eng = Engine(cfg, params, max_batch=4, max_len=64,
+                     prefill_chunk=8, kv_layout=layout)
+        rs = [ServeRequest(prompt=list(range(1 + i, 30 + 3 * i)),
+                           max_new_tokens=4) for i in range(4)]
+        eng.admit_many(rs[:2])
+        eng.step()
+        eng.admit_many(rs[2:])
+        eng.drain()
+        outs[layout] = [list(r.generated) for r in rs]
+        stats[layout] = eng.stats
+    contig_ops = (stats["contig"].prefill_chunks
+                  + stats["contig"].chunk_scatters)
+    paged_ops = stats["paged"].prefill_chunks + stats["paged"].chunk_scatters
+    return {"direct": stats["paged"].chunk_direct,
+            "scatter": stats["contig"].chunk_scatters,
+            "contig_ops": contig_ops, "paged_ops": paged_ops,
+            "reduction": contig_ops / max(paged_ops, 1),
+            "identical": outs["paged"] == outs["contig"]}
+
+
+def run(rows: Rows) -> Dict:
+    rng = np.random.RandomState(7)
+    interp = 1 if jax.default_backend() == "cpu" else 0
+    out: Dict = {}
+    ch = _chunk_ab(rng)
+    out["chunk"] = ch
+    rows.add("kernels/chunk/jnp", ch["jnp_s"] * 1e6,
+             f"tok_s={ch['jnp_tok_s']:.0f}")
+    rows.add("kernels/chunk/pallas", ch["pallas_s"] * 1e6,
+             f"tok_s={ch['pallas_tok_s']:.0f} "
+             f"speedup={ch['speedup']:.2f}x interp={interp}")
+    de = _decode_ab(rng)
+    out["decode"] = de
+    rows.add("kernels/decode/jnp", de["jnp_s"] * 1e6,
+             f"tok_s={de['jnp_tok_s']:.0f}")
+    rows.add("kernels/decode/pallas", de["pallas_s"] * 1e6,
+             f"tok_s={de['pallas_tok_s']:.0f} "
+             f"speedup={de['speedup']:.2f}x interp={interp}")
+    disp = _dispatch_counts()
+    out["dispatch"] = disp
+    rows.add("kernels/chunk_dispatch", 0.0,
+             f"direct={disp['direct']} scatter={disp['scatter']} "
+             f"contig_ops={disp['contig_ops']} "
+             f"paged_ops={disp['paged_ops']} "
+             f"reduction={disp['reduction']:.2f}x "
+             f"identical={1 if disp['identical'] else 0}")
+    save_json("kernels", out)
+    return out

@@ -34,7 +34,13 @@ Enforced floors:
     <= 0.85x the $/token of uniform dispatch with byte-identical greedy
     outputs, and the histogram $/token objective picks the cheap low-HBM
     instance for short-only traffic but high-HBM for the mixed histogram
-    (protects length/cost-aware routing, bench_routing.py).
+    (protects length/cost-aware routing, bench_routing.py);
+  * hot-path kernel dispatches keep oracle-path chunk and decode tok/s
+    above CPU-enforceable floors, direct-to-pool chunked prefill cuts
+    dispatch count vs the contig transient+scatter baseline with
+    byte-identical outputs, and — on a real accelerator only
+    (``interp=0``) — the Pallas kernels run >= 1x their jnp oracles
+    (protects the flash paged chunk-prefill kernel, bench_kernels.py).
 """
 
 from __future__ import annotations
@@ -52,6 +58,10 @@ MAX_PAGED_DECODE_REGRESSION = 0.20    # paged tok/s >= 0.8x contig
 MIN_PREFIX_CAPACITY_RATIO = 1.5       # share vs no-share at a tight pool
 MIN_PREFIX_WARM_REDUCTION = 0.40      # warm prefill-token cut at rho=0.5
 MAX_ROUTING_COST_RATIO = 0.85         # bucket-aware $/token vs uniform
+MIN_CHUNK_TOK_S = 10_000.0            # oracle paged chunk-attn, CPU floor
+MIN_DECODE_TOK_S = 1_000.0            # oracle paged decode, CPU floor
+MIN_PALLAS_SPEEDUP = 1.0              # only enforced when interp=0
+MIN_CHUNK_DISPATCH_REDUCTION = 1.1    # direct vs transient+scatter ops
 
 # --baseline trend tracking: (row name, derived key, better direction).
 # Deterministic count-based ratios ONLY — wall-time metrics flake across
@@ -63,6 +73,7 @@ TRACKED = [
     ("prefix_share/capacity", "ratio", "higher"),
     ("prefix_share/identity", "reduction", "higher"),
     ("routing/cost", "ratio", "lower"),
+    ("kernels/chunk_dispatch", "reduction", "higher"),
 ]
 
 
@@ -119,6 +130,7 @@ def check(rows: List[Tuple[str, float, str]]) -> List[str]:
     failures += check_kv_paging(rows)
     failures += check_prefix_share(rows)
     failures += check_routing(rows)
+    failures += check_kernels(rows)
     errors = [n for n, _, _ in rows if n.endswith("/ERROR")]
     failures += [f"suite error row: {n}" for n in errors]
     return failures
@@ -266,6 +278,46 @@ def check_kv_paging(rows: List[Tuple[str, float, str]]) -> List[str]:
         failures.append(
             "recovery decide() did not pick kv_restore with resident "
             f"blocks: {dec[0]}")
+    return failures
+
+
+def check_kernels(rows: List[Tuple[str, float, str]]) -> List[str]:
+    failures = []
+    floors = {"chunk": MIN_CHUNK_TOK_S, "decode": MIN_DECODE_TOK_S}
+    for op, floor in floors.items():
+        jnp_row = [d for n, _, d in rows if n == f"kernels/{op}/jnp"]
+        pal_row = [d for n, _, d in rows if n == f"kernels/{op}/pallas"]
+        if not jnp_row or not pal_row:
+            failures.append(f"no kernels/{op}/jnp or /pallas rows found")
+            continue
+        tok_s = derived_floats(jnp_row[0]).get("tok_s", 0.0)
+        if tok_s < floor:
+            failures.append(
+                f"oracle {op} {tok_s:.0f} tok/s < {floor:.0f} floor")
+        pvals = derived_floats(pal_row[0])
+        # interpret mode (CPU CI) is a correctness proxy, orders of
+        # magnitude off compiled speed — the speedup floor only binds on
+        # a real accelerator.
+        if pvals.get("interp", 1.0) == 0.0 \
+                and pvals.get("speedup", 0.0) < MIN_PALLAS_SPEEDUP:
+            failures.append(
+                f"pallas {op} kernel speedup {pvals.get('speedup')}x < "
+                f"{MIN_PALLAS_SPEEDUP}x oracle floor on accelerator")
+    disp = [d for n, _, d in rows if n == "kernels/chunk_dispatch"]
+    if not disp:
+        return failures + ["no kernels/chunk_dispatch row found"]
+    dvals = derived_floats(disp[0])
+    if dvals.get("reduction", 0.0) < MIN_CHUNK_DISPATCH_REDUCTION:
+        failures.append(
+            f"direct chunk dispatch reduction {dvals.get('reduction')}x < "
+            f"{MIN_CHUNK_DISPATCH_REDUCTION}x floor vs transient+scatter")
+    if dvals.get("identical", 0.0) != 1.0:
+        failures.append(
+            "greedy outputs diverged between direct-paged and contig "
+            f"chunked prefill: {disp[0]}")
+    if dvals.get("scatter", 0.0) <= 0.0:
+        failures.append(
+            f"contig baseline recorded no terminal scatters: {disp[0]}")
     return failures
 
 

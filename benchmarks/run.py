@@ -11,6 +11,7 @@ form by default; REPRO_FULL=1 enables paper-scale parameters.
   §5 exec plane -> bench_engine_throughput
   paged KV layout -> bench_kv_paging
   length/cost routing -> bench_routing
+  hot-path kernels -> bench_kernels
 """
 
 from __future__ import annotations
@@ -31,6 +32,7 @@ def main() -> None:
         ("beam_width", "benchmarks.bench_beam_width"),
         ("search_speed", "benchmarks.bench_search_speed"),
         ("engine_throughput", "benchmarks.bench_engine_throughput"),
+        ("kernels", "benchmarks.bench_kernels"),
         ("kv_paging", "benchmarks.bench_kv_paging"),
         ("prefix_share", "benchmarks.bench_prefix_share"),
         ("routing", "benchmarks.bench_routing"),

@@ -226,12 +226,15 @@ class HistogramCostObjective(Objective):
     per $/hr over the (input-len, output-len) bucket mix — the reciprocal
     of $/token, so argmax score == argmin $/token.
 
-    Subclassing ``Objective`` routes ``PlacementOptimizer`` onto its
-    reference scoring path (the fast path inlines only the stock Eq. 7),
-    where ``score`` is consulted per candidate; ``exhaustive_search`` and
-    ``populate_cluster`` consume it unchanged.  Scoring itself still runs
-    through the shared prefix-sum engine — one ``BucketEstimator`` per
-    (partial) spec, cached across the whole search."""
+    ``PlacementOptimizer`` recognizes this objective on its fast path:
+    the incremental stage composition is replayed per populated bucket
+    against that bucket's own prefix-sum tables (drawn from the same
+    cached ``BucketEstimator`` the reference scorer uses), so histogram
+    searches run at table-lookup speed rather than falling back to the
+    per-candidate reference scorer.  Any *other* ``Objective`` subclass
+    still routes to the reference path, where ``score`` is consulted per
+    candidate; ``exhaustive_search`` and ``populate_cluster`` consume it
+    unchanged."""
 
     def __init__(self, hist: Sequence[Sequence[float]],
                  buckets: Optional[LengthBuckets] = None,

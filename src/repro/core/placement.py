@@ -24,6 +24,14 @@ Two scoring paths:
     dropped, which both dedups equivalent inventory states and frees
     beam slots for genuinely different candidates.
 
+    ``HistogramCostObjective`` also runs on this path: the same
+    incremental composition (``_extend_state``) is replayed once per
+    populated traffic bucket against that bucket's own prefix-sum
+    tables, and the per-bucket requests/s compose harmonically into the
+    histogram $/token score.  Dominance pruning is disabled there — the
+    single-point dominance quantities don't bound per-bucket score
+    evolution, and the reference beam is score-only top-k.
+
   * **reference** (``use_fast=False``): the original per-layer
     ``estimator.estimate`` scoring, kept as the pinned source of truth
     (see ``tests/test_fast_engine.py``).
@@ -43,6 +51,7 @@ import math
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.buckets import HistogramCostObjective
 from repro.core.estimator import (Placement, Stage, estimate,
                                   max_batch_size)
 from repro.core.eval_engine import FastEstimator, StageTable
@@ -105,10 +114,11 @@ class _FastPartial:
     """
 
     __slots__ = ("segs", "used_d", "score", "batch", "m_nonlast",
-                 "sum_pre", "sum_dec", "max_pre", "max_dec", "cost")
+                 "sum_pre", "sum_dec", "max_pre", "max_dec", "cost",
+                 "bstate")
 
     def __init__(self, segs, used_d, score, batch, m_nonlast, sum_pre,
-                 sum_dec, max_pre, max_dec, cost):
+                 sum_dec, max_pre, max_dec, cost, bstate=None):
         self.segs = segs            # tuple of (StageTable, lo, hi)
         self.used_d = used_d        # {instance_name: devices} — never mutated
         self.score = score
@@ -119,6 +129,10 @@ class _FastPartial:
         self.max_pre = max_pre
         self.max_dec = max_dec
         self.cost = cost
+        # histogram mode only: one (segs_b, batch, m_nonlast, sum_pre,
+        # sum_dec, max_pre, max_dec) per populated traffic bucket, composed
+        # against that bucket's own tables
+        self.bstate = bstate
 
 
 @dataclasses.dataclass
@@ -154,9 +168,11 @@ class PlacementOptimizer:
         self.options = stage_options_for(
             [instances[n] for n in inventory], max_tp=max_tp)
         self.batch_cap = batch_cap
-        # the fast path inlines the stock Eq. 7 objective; a subclassed
-        # objective falls back to the reference scorer.
-        self.use_fast = use_fast and type(self.objective) is Objective
+        # the fast path inlines the stock Eq. 7 objective and the histogram
+        # $/token objective (per-bucket table composition); any other
+        # subclassed objective falls back to the reference scorer.
+        self.use_fast = use_fast and type(self.objective) in (
+            Objective, HistogramCostObjective)
         self.prune_dominated = prune_dominated
         self.engine = engine
         self.evaluated = 0
@@ -275,9 +291,30 @@ class PlacementOptimizer:
         opt_meta = [(t, o.instance.name, o.tp,
                      t.price_spot if spot else t.price_od)
                     for t, o in zip(tables, self.options)]
+        # histogram mode: per populated bucket, that bucket's own tables
+        # (one per option) from the SAME BucketEstimator the reference
+        # scorer uses, so both paths hit one shared table cache
+        hmeta = None
+        if type(obj) is HistogramCostObjective:
+            best = obj._estimator(self.spec)
+            bk = best.buckets
+            hmeta = []
+            for bi in range(bk.n_in):
+                for bo in range(bk.n_out):
+                    w = obj.hist[bi][bo]
+                    if w <= 0:
+                        continue
+                    fe = best.estimator(bi, bo)
+                    hmeta.append((w, float(bk.rep(bi, bo)[1]), fe.batch_cap,
+                                  tuple(fe.table(o.instance, o.tp)
+                                        for o in self.options)))
         n_l = self.spec.n_layers
         cap = self.batch_cap
-        root = _FastPartial((), {}, 0.0, 0, cap, 0.0, 0.0, 0.0, 0.0, 0.0)
+        root_b = (tuple(((), 0, cap_b, 0.0, 0.0, 0.0, 0.0)
+                        for _, _, cap_b, _ in hmeta)
+                  if hmeta is not None else None)
+        root = _FastPartial((), {}, 0.0, 0, cap, 0.0, 0.0, 0.0, 0.0, 0.0,
+                            root_b)
         dp: Dict[Tuple[int, int], List[_FastPartial]] = {(0, 0): [root]}
         inventory = self.inventory
         for l in range(1, n_l + 1):
@@ -288,18 +325,24 @@ class PlacementOptimizer:
                         continue
                     first = s == 0
                     key_new = (l, s + 1)
-                    for table, name, tp, price in opt_meta:
+                    for oi, (table, name, tp, price) in enumerate(opt_meta):
                         inv_t = inventory.get(name, 0)
                         if tp > inv_t:
                             continue
                         nb_nl = table.bound(lprime, l, first, False)
                         nb_l = table.bound(lprime, l, first, True)
+                        hb = None
+                        if hmeta is not None:
+                            hb = [(w, out_b, bt[oi],
+                                   bt[oi].bound(lprime, l, first, False),
+                                   bt[oi].bound(lprime, l, first, True))
+                                  for w, out_b, _, bt in hmeta]
                         for cand in beam:
                             if cand.used_d.get(name, 0) + tp > inv_t:
                                 continue
                             new = self._extend_fast(cand, table, lprime, l,
                                                     nb_nl, nb_l, price,
-                                                    name, tp)
+                                                    name, tp, hb)
                             self.evaluated += 1
                             if new.batch <= 0 and l == n_l:
                                 continue
@@ -308,70 +351,54 @@ class PlacementOptimizer:
 
     def _extend_fast(self, cand: _FastPartial, table: StageTable, lo: int,
                      hi: int, nb_nl: int, nb_l: int, price: float,
-                     name: str, tp: int) -> _FastPartial:
-        k = len(cand.segs)
+                     name: str, tp: int, hb=None) -> _FastPartial:
         segs = cand.segs + ((table, lo, hi),)
         used_d = dict(cand.used_d)
         used_d[name] = used_d.get(name, 0) + tp
         cost = cand.cost + price
-        m_nonlast = nb_nl if nb_nl < cand.m_nonlast else cand.m_nonlast
-        batch = nb_l if nb_l < cand.m_nonlast else cand.m_nonlast
-        if batch <= 0:
-            return _FastPartial(segs, used_d, 0.0, 0, m_nonlast, 0.0, 0.0,
-                                0.0, 0.0, cost)
-        bidx = batch - 1
-        if k == 0:
-            base_pre = (table.seg_pre(lo, hi, bidx) + table.pp_pre[bidx]
-                        + table.first_pre[bidx])
-            base_dec = table.seg_dec(lo, hi, bidx) + table.pp_dec[bidx]
-            sum_pre, sum_dec = base_pre, base_dec
-            max_pre, max_dec = base_pre, base_dec
-        elif batch == cand.batch:
-            # O(1) composition: every cached aggregate is valid at `batch`
-            base_pre = table.seg_pre(lo, hi, bidx) + table.pp_pre[bidx]
-            base_dec = table.seg_dec(lo, hi, bidx) + table.pp_dec[bidx]
-            sum_pre = cand.sum_pre + base_pre
-            sum_dec = cand.sum_dec + base_dec
-            max_pre = base_pre if base_pre > cand.max_pre else cand.max_pre
-            max_dec = base_dec if base_dec > cand.max_dec else cand.max_dec
-        else:
-            # the new stage changed the Eq. 6 batch: rebuild the per-stage
-            # terms at the new batch (O(stages) table lookups, no layer loop)
-            sum_pre = sum_dec = max_pre = max_dec = 0.0
-            base_pre = base_dec = 0.0
-            for j, (t, l0, l1) in enumerate(segs):
-                bp = t.seg_pre(l0, l1, bidx) + t.pp_pre[bidx]
-                bd = t.seg_dec(l0, l1, bidx) + t.pp_dec[bidx]
-                if j == 0:
-                    bp += t.first_pre[bidx]
-                sum_pre += bp
-                sum_dec += bd
-                if bp > max_pre:
-                    max_pre = bp
-                if bd > max_dec:
-                    max_dec = bd
-                base_pre, base_dec = bp, bd
-        # score the pipeline with the new stage holding the LM head
-        lpre_x = table.last_pre[bidx]
-        ldec_x = table.last_dec[bidx]
-        if k == 0:
-            # single-stage pipeline: no PP hand-off at all (Eq. 2)
-            p0 = base_pre - table.pp_pre[bidx] + lpre_x
-            d0 = base_dec - table.pp_dec[bidx] + ldec_x
-            tot_pre, tot_dec = p0, d0
-            bn_pre, bn_dec = p0, d0
-        else:
-            tot_pre = sum_pre + lpre_x
-            tot_dec = sum_dec + ldec_x
-            lp = base_pre + lpre_x
-            ld = base_dec + ldec_x
-            bn_pre = lp if lp > max_pre else max_pre
-            bn_dec = ld if ld > max_dec else max_dec
-        l_b = bn_pre + bn_dec
-        rps = batch / l_b if l_b > 0 else 0.0
-        score = self._score_fast(rps, tot_pre + tot_dec, cost)
+        state, terms = _extend_state(
+            (cand.batch, cand.m_nonlast, cand.sum_pre, cand.sum_dec,
+             cand.max_pre, cand.max_dec), segs, table, lo, hi, nb_nl, nb_l)
+        batch, m_nonlast, sum_pre, sum_dec, max_pre, max_dec = state
+        if hb is None:
+            if terms is None:
+                return _FastPartial(segs, used_d, 0.0, 0, m_nonlast, 0.0,
+                                    0.0, 0.0, 0.0, cost)
+            bn_pre, bn_dec, tot_pre, tot_dec = terms
+            l_b = bn_pre + bn_dec
+            rps = batch / l_b if l_b > 0 else 0.0
+            score = self._score_fast(rps, tot_pre + tot_dec, cost)
+            return _FastPartial(segs, used_d, score, batch, m_nonlast,
+                                sum_pre, sum_dec, max_pre, max_dec, cost)
+        # histogram mode: replay the composition per populated bucket with
+        # that bucket's own tables, then compose harmonically
+        # (histogram_tokens_per_s) — any infeasible bucket zeroes the score
+        sec_per_req = 0.0
+        tok_per_req = 0.0
+        feasible = True
+        bstate = []
+        for (w, out_b, t_b, nbnl_b, nbl_b), prev_b in zip(hb, cand.bstate):
+            segs_b = prev_b[0] + ((t_b, lo, hi),)
+            st_b, terms_b = _extend_state(prev_b[1:], segs_b, t_b, lo, hi,
+                                          nbnl_b, nbl_b)
+            bstate.append((segs_b,) + st_b)
+            if terms_b is None:
+                feasible = False
+                continue
+            l_bb = terms_b[0] + terms_b[1]
+            rps_b = st_b[0] / l_bb if l_bb > 0 else 0.0
+            if rps_b <= 0:
+                feasible = False
+                continue
+            sec_per_req += w / rps_b
+            tok_per_req += w * out_b
+        score = 0.0
+        if feasible and sec_per_req > 0:
+            tps = tok_per_req / sec_per_req
+            if tps > 0:
+                score = tps / cost
         return _FastPartial(segs, used_d, score, batch, m_nonlast, sum_pre,
-                            sum_dec, max_pre, max_dec, cost)
+                            sum_dec, max_pre, max_dec, cost, tuple(bstate))
 
     def _score_fast(self, rps: float, e2e: float, cost: float) -> float:
         """Inline of Objective.score (Eq. 7) on engine scalars."""
@@ -390,7 +417,12 @@ class PlacementOptimizer:
 
     def _update_fast(self, dp, key, cand: _FastPartial) -> None:
         beam = dp.setdefault(key, [])
-        if self.prune_dominated:
+        # histogram mode (bstate set) never prunes: the dominance
+        # quantities are single-point and don't bound how the per-bucket
+        # harmonic score evolves — a primary-point-dominated candidate can
+        # still win on a long-context bucket. The reference beam for a
+        # subclassed objective is score-only top-k; match it.
+        if self.prune_dominated and cand.bstate is None:
             # b dominates cand iff b is weakly better on every quantity an
             # extension's score can depend on: current score, Eq. 6 batch
             # headroom (m_nonlast — without it a zero-score-but-recoverable
@@ -419,6 +451,77 @@ class PlacementOptimizer:
         stages = tuple(Stage(t.instance, t.tp, hi - lo)
                        for t, lo, hi in best.segs)
         return self._finish(stages, best.score, wall)
+
+
+def _extend_state(prev, segs, table, lo, hi, nb_nl, nb_l):
+    """Compose one appended stage onto cached per-stage aggregates.
+
+    ``prev`` is (batch, m_nonlast, sum_pre, sum_dec, max_pre, max_dec)
+    before the new stage; ``segs`` already includes the new
+    ``(table, lo, hi)`` segment (needed for the batch-changed rebuild).
+    Returns ``(state, terms)``: the updated 6-tuple plus
+    ``(bn_pre, bn_dec, tot_pre, tot_dec)`` of the pipeline with the new
+    stage holding the LM head, or ``terms=None`` when the Eq. 6 batch
+    hits zero.  This is float-for-float the composition pinned against
+    the reference estimator by tests/test_fast_engine.py; the histogram
+    objective replays it per traffic bucket with that bucket's tables.
+    """
+    p_batch, p_m_nonlast, p_sum_pre, p_sum_dec, p_max_pre, p_max_dec = prev
+    k = len(segs) - 1
+    m_nonlast = nb_nl if nb_nl < p_m_nonlast else p_m_nonlast
+    batch = nb_l if nb_l < p_m_nonlast else p_m_nonlast
+    if batch <= 0:
+        return (0, m_nonlast, 0.0, 0.0, 0.0, 0.0), None
+    bidx = batch - 1
+    if k == 0:
+        base_pre = (table.seg_pre(lo, hi, bidx) + table.pp_pre[bidx]
+                    + table.first_pre[bidx])
+        base_dec = table.seg_dec(lo, hi, bidx) + table.pp_dec[bidx]
+        sum_pre, sum_dec = base_pre, base_dec
+        max_pre, max_dec = base_pre, base_dec
+    elif batch == p_batch:
+        # O(1) composition: every cached aggregate is valid at `batch`
+        base_pre = table.seg_pre(lo, hi, bidx) + table.pp_pre[bidx]
+        base_dec = table.seg_dec(lo, hi, bidx) + table.pp_dec[bidx]
+        sum_pre = p_sum_pre + base_pre
+        sum_dec = p_sum_dec + base_dec
+        max_pre = base_pre if base_pre > p_max_pre else p_max_pre
+        max_dec = base_dec if base_dec > p_max_dec else p_max_dec
+    else:
+        # the new stage changed the Eq. 6 batch: rebuild the per-stage
+        # terms at the new batch (O(stages) table lookups, no layer loop)
+        sum_pre = sum_dec = max_pre = max_dec = 0.0
+        base_pre = base_dec = 0.0
+        for j, (t, l0, l1) in enumerate(segs):
+            bp = t.seg_pre(l0, l1, bidx) + t.pp_pre[bidx]
+            bd = t.seg_dec(l0, l1, bidx) + t.pp_dec[bidx]
+            if j == 0:
+                bp += t.first_pre[bidx]
+            sum_pre += bp
+            sum_dec += bd
+            if bp > max_pre:
+                max_pre = bp
+            if bd > max_dec:
+                max_dec = bd
+            base_pre, base_dec = bp, bd
+    # score terms with the new stage holding the LM head
+    lpre_x = table.last_pre[bidx]
+    ldec_x = table.last_dec[bidx]
+    if k == 0:
+        # single-stage pipeline: no PP hand-off at all (Eq. 2)
+        p0 = base_pre - table.pp_pre[bidx] + lpre_x
+        d0 = base_dec - table.pp_dec[bidx] + ldec_x
+        tot_pre, tot_dec = p0, d0
+        bn_pre, bn_dec = p0, d0
+    else:
+        tot_pre = sum_pre + lpre_x
+        tot_dec = sum_dec + ldec_x
+        lp = base_pre + lpre_x
+        ld = base_dec + ldec_x
+        bn_pre = lp if lp > max_pre else max_pre
+        bn_dec = ld if ld > max_dec else max_dec
+    return ((batch, m_nonlast, sum_pre, sum_dec, max_pre, max_dec),
+            (bn_pre, bn_dec, tot_pre, tot_dec))
 
 
 def _neg_score(c) -> float:

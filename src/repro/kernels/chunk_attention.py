@@ -1,0 +1,244 @@
+"""Flash chunk-prefill attention Pallas TPU kernels (a C-token chunk of
+new queries against the full KV history written so far).
+
+One online-softmax kernel body serves every chunked-prefill read path:
+
+* ``chunk_attention`` — contiguous cache (B, S, nkv, d). The chunk's C
+  queries sit at absolute positions ``bases[b] + j``; KV blocks stream
+  through VMEM on the innermost grid axis with running-softmax scratch,
+  the same q-tiling as ``flash_attention`` but against a cache operand.
+* ``chunk_attention_paged`` — block-pool cache (n_blocks, block, nkv, d)
+  plus per-row block tables walked via scalar prefetch (the
+  ``PrefetchScalarGridSpec`` pattern of ``decode_attention_paged``): the
+  BlockSpec index_map reads ``tbl[b, ik]`` so each grid step DMAs exactly
+  the pool block backing virtual positions ``[ik*block, (ik+1)*block)``
+  of row ``b``. No gathered page view is ever materialized — the jnp
+  oracle's O(B*max_blocks*block) ``_gather_pages`` copy disappears.
+
+``bases`` is a scalar (engine chunk groups share one base) or per-row
+(the prefix-share suffix path); masking is causal against the prefix
+(``k_pos <= bases[b] + j``) with optional sliding-window attention.
+Covers decode as the C=1 special case, so the one body also backs
+``prefill_suffix``'s attention.
+
+Debug ``probe`` mode (KV sanitizer follow-up): an extra (B, nh) output
+carries the max |K|/|V| magnitude seen at *readable* (mask-valid)
+positions; the ops wrapper checkifies it against ``KV_POISON`` so a
+stale block-table entry fires at the op itself instead of only via
+final byte-identity.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _chunk_kernel(bases_ref, q_ref, k_ref, v_ref, o_ref, *rest, scale: float,
+                  window: Optional[int], block_q: int, block_kv: int,
+                  n_kv_blocks: int, probe: bool):
+    if probe:
+        p_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        p_ref, (m_scr, l_scr, acc_scr) = None, rest
+    ib = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    if probe:
+        @pl.when((ik == 0) & (iq == 0))
+        def _init_probe():
+            p_ref[...] = jnp.zeros_like(p_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bkv, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # ik indexes VIRTUAL blocks of this row; in the paged layout the pool
+    # block holding them was selected by the index_map through the table
+    q_pos = (bases_ref[ib] + iq * block_q
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_kv), 0))
+    k_pos = ik * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_kv), 1)
+    mask = k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    if probe:
+        readable = jnp.any(mask, axis=0)                   # (bkv,)
+        mag = jnp.maximum(jnp.max(jnp.abs(k), axis=1),
+                          jnp.max(jnp.abs(v), axis=1))
+        p_ref[0, 0] = jnp.maximum(
+            p_ref[0, 0], jnp.max(jnp.where(readable, mag, 0.0)))
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jnp.dot(p, v, preferred_element_type=jnp.float32))
+    m_scr[...] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _out():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def _chunk_paged_kernel(tbl_ref, bases_ref, *rest, **kw):
+    # the block table is consumed by the BlockSpec index maps only
+    del tbl_ref
+    _chunk_kernel(bases_ref, *rest, **kw)
+
+
+def _norm_bases(bases, b: int) -> jax.Array:
+    bases = jnp.asarray(bases, jnp.int32)
+    if bases.ndim == 0:
+        bases = jnp.broadcast_to(bases, (b,))
+    return bases
+
+
+def _out_tree(b, c, nh, d, dtype, block_q, nargs, probe):
+    """(out_shape, out_specs) — plus the probe max-|KV| row when armed.
+    ``nargs`` index-map arity matches the grid spec's scalar prefetch."""
+    if nargs == 2:
+        o_map = lambda ib, ih, iq, ik, tbl, bases: (ib, iq, ih, 0)
+        p_map = lambda ib, ih, iq, ik, tbl, bases: (ib, ih)
+    else:
+        o_map = lambda ib, ih, iq, ik, bases: (ib, iq, ih, 0)
+        p_map = lambda ib, ih, iq, ik, bases: (ib, ih)
+    shapes = [jax.ShapeDtypeStruct((b, c, nh, d), dtype)]
+    specs = [pl.BlockSpec((1, block_q, 1, d), o_map)]
+    if probe:
+        shapes.append(jax.ShapeDtypeStruct((b, nh), jnp.float32))
+        specs.append(pl.BlockSpec((1, 1), p_map))
+        return shapes, specs
+    return shapes[0], specs[0]
+
+
+_SCRATCH_F32 = jnp.float32
+
+
+def _scratch(block_q: int, d: int):
+    return [
+        pltpu.VMEM((block_q,), _SCRATCH_F32),
+        pltpu.VMEM((block_q,), _SCRATCH_F32),
+        pltpu.VMEM((block_q, d), _SCRATCH_F32),
+    ]
+
+
+def chunk_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                    bases, *, window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128,
+                    probe: bool = False, interpret: bool = False):
+    """q: (B,C,nh,d); cache_k/v: (B,S,nkv,d) with the chunk already
+    written; bases scalar or (B,) — row b's queries sit at absolute
+    positions ``bases[b] + [0, C)``. Returns o, or (o, probe_max) when
+    ``probe`` is armed."""
+    b, c, nh, d = q.shape
+    s, nkv = cache_k.shape[1], cache_k.shape[2]
+    assert nh % nkv == 0
+    g = nh // nkv
+    block_q = min(block_q, c)
+    block_kv = min(block_kv, s)
+    assert c % block_q == 0, (c, block_q)
+    assert s % block_kv == 0, (s, block_kv)
+    nq = c // block_q
+    nk = s // block_kv
+    bases = _norm_bases(bases, b)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_chunk_kernel, scale=scale, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               n_kv_blocks=nk, probe=probe)
+    out_shape, out_specs = _out_tree(b, c, nh, d, q.dtype, block_q,
+                                     nargs=1, probe=probe)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                      # query base positions
+        grid=(b, nh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda ib, ih, iq, ik, bases: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda ib, ih, iq, ik, bases, g=g:
+                         (ib, ik, ih // g, 0)),
+            pl.BlockSpec((1, block_kv, 1, d),
+                         lambda ib, ih, iq, ik, bases, g=g:
+                         (ib, ik, ih // g, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=_scratch(block_q, d),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(bases, q, cache_k, cache_v)
+
+
+def chunk_attention_paged(q: jax.Array, cache_k: jax.Array,
+                          cache_v: jax.Array, block_tbl: jax.Array,
+                          bases, *, window: Optional[int] = None,
+                          block_q: int = 128, probe: bool = False,
+                          interpret: bool = False):
+    """q: (B,C,nh,d); cache_k/v: (n_blocks, block, nkv, d) pool with the
+    chunk already written; block_tbl: (B, max_blocks) int32 pool-block id
+    per virtual block (0 = trash block, masked); bases scalar or (B,).
+    Returns o, or (o, probe_max) when ``probe`` is armed."""
+    b, c, nh, d = q.shape
+    block, nkv = cache_k.shape[1], cache_k.shape[2]
+    assert nh % nkv == 0
+    g = nh // nkv
+    mb = block_tbl.shape[1]
+    block_q = min(block_q, c)
+    assert c % block_q == 0, (c, block_q)
+    nq = c // block_q
+    bases = _norm_bases(bases, b)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_chunk_paged_kernel, scale=scale,
+                               window=window, block_q=block_q,
+                               block_kv=block, n_kv_blocks=mb, probe=probe)
+    out_shape, out_specs = _out_tree(b, c, nh, d, q.dtype, block_q,
+                                     nargs=2, probe=probe)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                      # block table + bases
+        grid=(b, nh, nq, mb),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d),
+                         lambda ib, ih, iq, ik, tbl, bases: (ib, iq, ih, 0)),
+            pl.BlockSpec((1, block, 1, d),
+                         lambda ib, ih, iq, ik, tbl, bases, g=g:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+            pl.BlockSpec((1, block, 1, d),
+                         lambda ib, ih, iq, ik, tbl, bases, g=g:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+        ],
+        out_specs=out_specs,
+        scratch_shapes=_scratch(block_q, d),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(block_tbl.astype(jnp.int32), bases, q, cache_k, cache_v)

@@ -111,9 +111,13 @@ def decode_attention(q: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
     )(pos, q, cache_k, cache_v)
 
 
-def _dec_paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
-                      l_scr, acc_scr, *, scale: float, window: Optional[int],
-                      block: int, n_virt_blocks: int):
+def _dec_paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                      scale: float, window: Optional[int], block: int,
+                      n_virt_blocks: int, probe: bool):
+    if probe:
+        p_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        p_ref, (m_scr, l_scr, acc_scr) = None, rest
     ib = pl.program_id(0)
     ik = pl.program_id(2)
 
@@ -122,6 +126,8 @@ def _dec_paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
+        if probe:
+            p_ref[...] = jnp.zeros_like(p_ref)
 
     q = q_ref[0, 0, 0, :].astype(jnp.float32)              # (d,)
     k = k_ref[0, :, 0, :].astype(jnp.float32)              # (block, d)
@@ -136,6 +142,13 @@ def _dec_paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
     if window is not None:
         mask &= k_pos > pos - window
     s = jnp.where(mask, s, NEG_INF)
+
+    if probe:
+        # sanitizer probe: max |K|/|V| over readable (mask-valid) positions
+        mag = jnp.maximum(jnp.max(jnp.abs(k), axis=1),
+                          jnp.max(jnp.abs(v), axis=1))
+        p_ref[0, 0] = jnp.maximum(
+            p_ref[0, 0], jnp.max(jnp.where(mask, mag, 0.0)))
 
     m_prev = m_scr[0]
     m_cur = jnp.maximum(m_prev, jnp.max(s))
@@ -155,11 +168,13 @@ def _dec_paged_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref, m_scr,
 def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
                            cache_v: jax.Array, block_tbl: jax.Array,
                            pos: jax.Array, *, window: Optional[int] = None,
-                           interpret: bool = False) -> jax.Array:
+                           probe: bool = False, interpret: bool = False):
     """q: (B,1,nh,d); cache_k/v: (n_blocks, block, nkv, d) pool;
     block_tbl: (B, max_blocks) int32 pool-block id per virtual block
     (0 = trash block, masked); pos scalar or (B,) — the position of the
-    current (already written) token per sequence."""
+    current (already written) token per sequence. With ``probe`` armed
+    (KV sanitizer), also returns a (B, nh) max readable |K|/|V| magnitude
+    for the caller to checkify against ``KV_POISON``."""
     b, _, nh, d = q.shape
     block, nkv = cache_k.shape[1], cache_k.shape[2]
     assert nh % nkv == 0
@@ -171,7 +186,14 @@ def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
     scale = 1.0 / math.sqrt(d)
 
     kernel = functools.partial(_dec_paged_kernel, scale=scale, window=window,
-                               block=block, n_virt_blocks=mb)
+                               block=block, n_virt_blocks=mb, probe=probe)
+    out_shape = [jax.ShapeDtypeStruct((b, 1, nh, d), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, 1, d),
+                              lambda ib, ih, ik, tbl, pos: (ib, 0, ih, 0))]
+    if probe:
+        out_shape.append(jax.ShapeDtypeStruct((b, nh), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda ib, ih, ik, tbl, pos: (ib, ih)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                      # block table + positions
         grid=(b, nh, mb),
@@ -185,8 +207,7 @@ def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
                          lambda ib, ih, ik, tbl, pos, g=g:
                          (tbl[ib, ik], 0, ih // g, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, 1, d),
-                               lambda ib, ih, ik, tbl, pos: (ib, 0, ih, 0)),
+        out_specs=out_specs if probe else out_specs[0],
         scratch_shapes=[
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
@@ -196,6 +217,6 @@ def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, 1, nh, d), q.dtype),
+        out_shape=out_shape if probe else out_shape[0],
         interpret=interpret,
     )(block_tbl.astype(jnp.int32), pos, q, cache_k, cache_v)

@@ -12,6 +12,7 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.kernels import chunk_attention as _ca
 from repro.kernels import flash_attention as _fa
 from repro.kernels import decode_attention as _da
 from repro.kernels import ssd_scan as _ssd
@@ -19,6 +20,24 @@ from repro.kernels import ssd_scan as _ssd
 
 def _interpret() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _check_probe(out, probe: bool):
+    """Discharge a kernel's sanitizer probe output: checkify the max
+    readable |K|/|V| magnitude against the freed-block poison sentinel.
+    The surrounding dispatch (engine jit) is checkify-transformed whenever
+    the probe is armed."""
+    if not probe:
+        return out
+    import jax.numpy as jnp
+    from jax.experimental import checkify
+    from repro.serving.kv_blocks import KV_POISON
+    o, pmax = out
+    worst = jnp.max(pmax)
+    checkify.check(worst < KV_POISON,
+                   "poisoned KV block read through the block table "
+                   "(max readable |kv| = {m})", m=worst)
+    return o
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -49,13 +68,64 @@ def _decode_jit(q, cache_k, cache_v, pos, *, window, block_kv):
                                 interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("window",))
+@functools.partial(jax.jit, static_argnames=("window", "probe"))
 def decode_attention_paged(q, cache_k, cache_v, block_tbl, pos, *,
-                           window: Optional[int] = None):
+                           window: Optional[int] = None,
+                           probe: bool = False):
     """Block-pool decode kernel; matches
     models.attention.decode_attention_paged's signature."""
-    return _da.decode_attention_paged(q, cache_k, cache_v, block_tbl, pos,
-                                      window=window, interpret=_interpret())
+    out = _da.decode_attention_paged(q, cache_k, cache_v, block_tbl, pos,
+                                     window=window, probe=probe,
+                                     interpret=_interpret())
+    return _check_probe(out, probe)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q",
+                                             "block_kv"))
+def chunk_attention(q, cache_k, cache_v, bases, *,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_kv: int = 128):
+    """Flash chunk kernel against a linear cache. ``bases`` is scalar or
+    (B,): row b's C queries sit at absolute positions ``bases[b]+[0,C)``.
+    Non-tiling shapes fall back to the jnp oracle (shape checks are
+    trace-time static)."""
+    c, s = q.shape[1], cache_k.shape[1]
+    if c % min(block_q, c) or s % min(block_kv, s):
+        from repro.models import attention as _attn
+        import jax.numpy as jnp
+        bases = jnp.asarray(bases, jnp.int32)
+        q_pos = (jnp.broadcast_to(bases, (q.shape[0],))[:, None]
+                 + jnp.arange(c)[None] if bases.ndim == 0
+                 else bases[:, None] + jnp.arange(c)[None])
+        return _attn.chunk_attention(q, cache_k, cache_v, q_pos,
+                                     window=window)
+    return _ca.chunk_attention(q, cache_k, cache_v, bases, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "probe"))
+def chunk_attention_paged(q, cache_k, cache_v, block_tbl, bases, *,
+                          window: Optional[int] = None, block_q: int = 128,
+                          probe: bool = False):
+    """Flash chunk kernel against the block pool, walking the block table
+    via scalar prefetch — no gathered page view is materialized. Covers
+    the engine chunk path (scalar base) and the prefix-share suffix path
+    (per-row bases)."""
+    c = q.shape[1]
+    if c % min(block_q, c):
+        from repro.models import attention as _attn
+        import jax.numpy as jnp
+        bases = jnp.asarray(bases, jnp.int32)
+        q_pos = (jnp.broadcast_to(bases, (q.shape[0],))[:, None]
+                 + jnp.arange(c)[None] if bases.ndim == 0
+                 else bases[:, None] + jnp.arange(c)[None])
+        return _attn.chunk_attention_paged(q, cache_k, cache_v, block_tbl,
+                                           q_pos, window=window, probe=probe)
+    out = _ca.chunk_attention_paged(q, cache_k, cache_v, block_tbl, bases,
+                                    window=window, block_q=block_q,
+                                    probe=probe, interpret=_interpret())
+    return _check_probe(out, probe)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -206,10 +206,26 @@ def _gather_pages(cache_k: jax.Array, cache_v: jax.Array,
     return pk.reshape(shape), pv.reshape(shape)
 
 
+def _poison_probe(pk: jax.Array, pv: jax.Array, readable: jax.Array) -> None:
+    """Device-side KV sanitizer probe: assert no *readable* (mask-valid)
+    gathered position carries freed-block poison. The caller's dispatch
+    must be ``checkify``-transformed (the engine arms this only alongside
+    the sanitizer); positions hidden by masking are exempt — a reused
+    block legitimately holds poison past its written prefix."""
+    from jax.experimental import checkify
+    from repro.serving.kv_blocks import KV_POISON
+    mag = jnp.maximum(jnp.max(jnp.abs(pk.astype(jnp.float32)), axis=(-2, -1)),
+                      jnp.max(jnp.abs(pv.astype(jnp.float32)), axis=(-2, -1)))
+    worst = jnp.max(jnp.where(readable, mag, 0.0))
+    checkify.check(worst < KV_POISON,
+                   "poisoned KV block read through the block table "
+                   "(max readable |kv| = {m})", m=worst)
+
+
 def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
                            cache_v: jax.Array, block_tbl: jax.Array,
-                           pos: jax.Array, window: Optional[int] = None
-                           ) -> jax.Array:
+                           pos: jax.Array, window: Optional[int] = None,
+                           probe: bool = False) -> jax.Array:
     """Block-table ``decode_attention``. q: (B,1,nh,d); cache_k/v:
     (n_blocks, block, nkv, d); pos scalar or (B,), position of the current
     (already written) token."""
@@ -220,6 +236,8 @@ def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
     valid = kpos[None, :] <= pos[:, None]
     if window is not None:
         valid &= kpos[None, :] > (pos[:, None] - window)
+    if probe:
+        _poison_probe(pk, pv, valid)
     mask = valid[:, None, None, None, :]
     if pk.dtype != q.dtype:
         pk, pv = pk.astype(q.dtype), pv.astype(q.dtype)
@@ -228,8 +246,8 @@ def decode_attention_paged(q: jax.Array, cache_k: jax.Array,
 
 def chunk_attention_paged(q: jax.Array, cache_k: jax.Array,
                           cache_v: jax.Array, block_tbl: jax.Array,
-                          q_pos: jax.Array, window: Optional[int] = None
-                          ) -> jax.Array:
+                          q_pos: jax.Array, window: Optional[int] = None,
+                          probe: bool = False) -> jax.Array:
     """Block-table ``chunk_attention``: (B,C) queries at absolute positions
     ``q_pos`` against each row's gathered pages."""
     pk, pv = _gather_pages(cache_k, cache_v, block_tbl)
@@ -237,6 +255,8 @@ def chunk_attention_paged(q: jax.Array, cache_k: jax.Array,
     valid = kpos[None, None, :] <= q_pos[:, :, None]        # (B, C, S)
     if window is not None:
         valid &= kpos[None, None, :] > (q_pos[:, :, None] - window)
+    if probe:
+        _poison_probe(pk, pv, jnp.any(valid, axis=1))
     mask = valid[:, None, None, :, :]
     if pk.dtype != q.dtype:
         pk, pv = pk.astype(q.dtype), pv.astype(q.dtype)

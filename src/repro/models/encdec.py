@@ -8,7 +8,7 @@ biases, absolute sinusoidal positions, tied embeddings — is real.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -231,6 +231,79 @@ class EncDecLM:
             last = x[jnp.arange(b), last_pos][:, None, :]
         logits = self.logits(params, last)[:, 0, :]
         return logits, cache
+
+    def cross_kv(self, params, enc_out) -> Tuple[jax.Array, jax.Array]:
+        """Per-layer cross-attention K/V of ``enc_out`` — the decode
+        cache's ck/cv computed WITHOUT running any decoder tokens, exactly
+        as ``_decoder_full`` would project them. Chunked prefill warms the
+        cross cache once at group creation; the chunks then touch only
+        self-attention."""
+        c = self.cfg
+
+        def body(_, p_l):
+            p = p_l["cross_attn"]
+            kc = (enc_out @ p["wk"] + p["bk"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], c.n_kv_heads, c.hd)
+            vc = (enc_out @ p["wv"] + p["bv"]).reshape(
+                enc_out.shape[0], enc_out.shape[1], c.n_kv_heads, c.hd)
+            return 0, (kc, vc)
+        _, (ck, cv) = jax.lax.scan(body, 0, params["decoder"])
+        return ck, cv
+
+    def prefill_chunk(self, params, cache, tokens, base,
+                      last_pos: Optional[jax.Array] = None):
+        """Chunked decoder prefill: ``tokens`` (B, C) sit at absolute
+        decoder positions [base, base+C). The cross-attention cache
+        (ck/cv) must already be resident — ``cross_kv`` at group creation
+        — so each chunk runs only the self-attention/cross-read decoder
+        body, mathematically identical to one full ``prefill`` over the
+        concatenated chunks. Signature matches the LM chunk dispatch."""
+        c = self.cfg
+        b, cl = tokens.shape
+        x = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        max_pos = cache["k"].shape[2]
+        pe = sinusoidal_positions(max_pos, c.d_model).astype(self.dtype)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, base, cl, axis=0)[None]
+        q_pos = base + jnp.broadcast_to(jnp.arange(cl)[None], (b, cl))
+
+        def body(h, xs):
+            p_l, ck, cv, cck, ccv = xs
+            a = self.norm(h, p_l["ln1"])
+            q, k, v = self._proj_qkv(p_l["self_attn"], a, a)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), base, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), base, axis=1)
+            if self.use_pallas:
+                from repro.kernels import ops as kops
+                o = kops.chunk_attention(q, ck, cv, base)
+            else:
+                o = attn.chunk_attention(q, ck, cv, q_pos)
+            h = h + self._attn_out(p_l["self_attn"], o, b, cl)
+            a = self.norm(h, p_l["ln2"])
+            qc = (a @ p_l["cross_attn"]["wq"]
+                  + p_l["cross_attn"]["bq"]).reshape(b, cl, c.n_heads, c.hd)
+            oc = attn.sdpa(qc, cck, ccv, mask=None)
+            h = h + self._attn_out(p_l["cross_attn"], oc, b, cl)
+            m = self.norm(h, p_l["ln3"])
+            h = h + ffn_mod.ffn_apply(p_l["mlp"], m, c.act, c.gated_ffn,
+                                      sharder=self.sharder)
+            return h, (ck, cv)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["decoder"], cache["k"], cache["v"],
+                      cache["ck"], cache["cv"]))
+        x = self.norm(x, params["final_norm"])
+        new_cache = dict(cache)
+        new_cache["k"], new_cache["v"] = k_new, v_new
+        new_cache["pos"] = jnp.broadcast_to(
+            base + cl, cache["pos"].shape).astype(jnp.int32)
+        if last_pos is None:
+            last = x[:, -1:, :]
+        else:
+            last = x[jnp.arange(b), last_pos][:, None, :]
+        logits = self.logits(params, last)[:, 0, :]
+        return logits, new_cache
 
     def decode_step(self, params, cache, tokens):
         """tokens: (B,1) int32."""

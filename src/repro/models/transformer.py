@@ -36,10 +36,15 @@ class LM:
                  use_pallas: bool = False, attn_chunk: int = 512,
                  ssd_chunk: int = 128, remat: bool = True,
                  moe_capacity_factor: float = 1.25,
-                 remat_policy: Optional[str] = None):
+                 remat_policy: Optional[str] = None,
+                 kv_probe: bool = False):
         self.cfg = cfg
         self.sharder = sharder or Sharder(mesh=None)
         self.use_pallas = use_pallas
+        # device-side KV sanitizer probe: paged gathers checkify readable
+        # |K|/|V| against KV_POISON. Requires the caller's dispatch to be
+        # checkify-transformed (the engine arms it with the sanitizer).
+        self.kv_probe = kv_probe
         self.attn_chunk = attn_chunk
         self.ssd_chunk = ssd_chunk
         self.remat = remat
@@ -235,10 +240,12 @@ class LM:
         if self.use_pallas:
             from repro.kernels import ops as kops
             o = kops.decode_attention_paged(q, ck, cv, block_tbl, pos,
-                                            window=c.swa_window)
+                                            window=c.swa_window,
+                                            probe=self.kv_probe)
         else:
             o = attn.decode_attention_paged(q, ck, cv, block_tbl, pos,
-                                            window=c.swa_window)
+                                            window=c.swa_window,
+                                            probe=self.kv_probe)
         o = o.reshape(x.shape[0], 1, c.n_heads * c.hd)
         o = o @ p["wo"]
         if "bo" in p:
@@ -328,21 +335,34 @@ class LM:
         if c.m_rope:
             positions = jnp.broadcast_to(q_pos[None], (3,) + q_pos.shape)
         q, k, v = self._qkv(p["attn"], h, positions)
-        # intentionally jnp even under use_pallas: no chunk kernel with a
-        # KV-history operand exists yet (ROADMAP "Pallas prefill-chunk
-        # kernel"); prefill/decode still route to the kernels
+        # under use_pallas the flash chunk kernel walks the block table by
+        # scalar prefetch (q_pos is base + arange by construction, so the
+        # kernel takes the bases instead of the dense position grid)
         if block_tbl is not None:
             ck, cv = attn.cache_write_chunk_paged(ck, cv, k, v, base,
                                                   block_tbl, lens=lens)
-            o = attn.chunk_attention_paged(q, ck, cv, block_tbl, q_pos,
-                                           window=c.swa_window)
+            if self.use_pallas:
+                from repro.kernels import ops as kops
+                o = kops.chunk_attention_paged(q, ck, cv, block_tbl, base,
+                                               window=c.swa_window,
+                                               probe=self.kv_probe)
+            else:
+                o = attn.chunk_attention_paged(q, ck, cv, block_tbl, q_pos,
+                                               window=c.swa_window,
+                                               probe=self.kv_probe)
         else:
             assert lens is None, "column masking requires the paged path"
             ck = jax.lax.dynamic_update_slice_in_dim(
                 ck, k.astype(ck.dtype), base, axis=1)
             cv = jax.lax.dynamic_update_slice_in_dim(
                 cv, v.astype(cv.dtype), base, axis=1)
-            o = attn.chunk_attention(q, ck, cv, q_pos, window=c.swa_window)
+            if self.use_pallas:
+                from repro.kernels import ops as kops
+                o = kops.chunk_attention(q, ck, cv, base,
+                                         window=c.swa_window)
+            else:
+                o = attn.chunk_attention(q, ck, cv, q_pos,
+                                         window=c.swa_window)
         o = o.reshape(x.shape[0], x.shape[1], c.n_heads * c.hd) @ p["attn"]["wo"]
         if "bo" in p["attn"]:
             o = o + p["attn"]["bo"]
@@ -644,9 +664,11 @@ class LM:
 
     def prefill_chunk(self, params: Dict, cache: Dict, tokens: jax.Array,
                       base: jax.Array,
-                      last_pos: Optional[jax.Array] = None
+                      last_pos: Optional[jax.Array] = None,
+                      block_tbl: Optional[jax.Array] = None,
+                      lens: Optional[jax.Array] = None
                       ) -> Tuple[jax.Array, Dict]:
-        """Incremental prefill: extend a *linear* cache with a C-token chunk
+        """Incremental prefill: extend a cache with a C-token chunk
         starting at absolute position ``base``.
 
         tokens: (B, C) int32; base: scalar int32. Chunk K/V land at cache
@@ -655,8 +677,16 @@ class LM:
         mathematically identical to one full prefill — that is what lets
         migration recompute interleave with live decode without a
         head-of-line stall. Attention families only (SSM state would need
-        carried recurrence). Works on linear and paged caches (the block
-        table threads through the stacked-layer scan as an invariant).
+        carried recurrence).
+
+        Two destinations: a private cache (linear, or paged through the
+        cache's own ``block_tbl``), or — when ``block_tbl`` is passed —
+        the ENGINE's pool, with each of the B rows routed through its own
+        table row so chunks land directly in the owning slot's blocks (no
+        transient cache, no terminal scatter). In that engine-direct mode
+        ``lens`` masks each row's columns >= lens into the trash block
+        (rows that finished mid-group stop writing) and the per-SLOT
+        ``pos`` update is the caller's, like ``prefill_suffix``.
         Returns (logits at ``last_pos`` (default: last chunk column),
         updated cache).
         """
@@ -667,19 +697,21 @@ class LM:
         x = jnp.take(params["embed"]["tok"], tokens, axis=0)
         b, cl = tokens.shape
         q_pos = base + jnp.broadcast_to(jnp.arange(cl)[None], (b, cl))
-        tbl = cache.get("block_tbl")
+        direct = block_tbl is not None
+        tbl = block_tbl if direct else cache.get("block_tbl")
 
         def body(h, xs):
             p_l, ck, cv = xs
             h, ck, cv = self._dense_layer_chunk(p_l, h, q_pos, ck, cv, base,
-                                                block_tbl=tbl)
+                                                block_tbl=tbl, lens=lens)
             return h, (ck, cv)
         x, (ck, cv) = jax.lax.scan(
             body, x, (params["layers"], cache["k"], cache["v"]))
         new_cache = dict(cache)
         new_cache["k"], new_cache["v"] = ck, cv
-        new_cache["pos"] = jnp.broadcast_to(base + cl, cache["pos"].shape
-                                            ).astype(jnp.int32)
+        if not direct:
+            new_cache["pos"] = jnp.broadcast_to(base + cl, cache["pos"].shape
+                                                ).astype(jnp.int32)
         x = self.norm(x, params["final_norm"])
         if last_pos is None:
             last = x[:, -1:, :]

@@ -62,7 +62,13 @@ admission throughput and trace stability:
   (the migration-recompute case) prefill chunk-by-chunk between decode
   steps, bounding head-of-line blocking for live slots during interruption
   storms. Pendings admitted together advance as ONE dispatch per scheduling
-  step (a ``_PendingGroup``), not a batch-1 loop per request.
+  step (a ``_PendingGroup``), not a batch-1 loop per request. Under the
+  paged layout each chunk's K/V is written STRAIGHT into the owning slots'
+  pool blocks through a snapshot of their block tables — no transient
+  group cache, no terminal scatter dispatch (``EngineStats.chunk_direct``
+  vs ``chunk_scatters``); contig keeps the transient path as the A/B
+  baseline. Enc-dec requests chunk too: the cross-attention cache is
+  warmed by one encoder pass when the group cache is created.
 * **Fused jit'd slot scatter** — one jit'd gather/scatter installs a whole
   prefill group into its slots (through the block tables under the paged
   layout), replacing the per-cache-key Python ``at[].set`` loop.
@@ -118,6 +124,8 @@ class EngineStats:
     prefills: int = 0           # requests prefilled (admissions)
     prefill_batches: int = 0    # batched prefill dispatches
     prefill_chunks: int = 0     # chunked-prefill chunk dispatches
+    chunk_direct: int = 0       # paged chunks written in-place (no scatter)
+    chunk_scatters: int = 0     # contig finisher scatters (transient path)
     decode_steps: int = 0
     tokens_out: int = 0
     retraces: int = 0           # total jit traces (prefill+decode+scatter)
@@ -169,10 +177,6 @@ class Engine:
         assert kv_alloc in ("lazy", "upfront"), kv_alloc
         _silence_cpu_donation_warnings()
         self.cfg = cfg
-        model_kw = dict(model_kw or {})
-        model_kw.setdefault("use_pallas", use_pallas)
-        self.use_pallas = model_kw["use_pallas"]
-        self.model = build_model(cfg, **model_kw)
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
@@ -216,6 +220,20 @@ class Engine:
             self.bm = BlockManager(n_blocks, block_size, max_batch, mb,
                                    overcommit=kv_overcommit,
                                    sanitize=kv_sanitize)
+        elif prefix_share:
+            raise ValueError("prefix_share requires kv_layout='paged'")
+        # model AFTER the block manager: sanitize mode arms the device-side
+        # poison probe — paged gathers emit a max readable |K|/|V| that is
+        # checkify'd against KV_POISON, so a stale block-table read fires
+        # at the offending dispatch instead of only via output divergence
+        model_kw = dict(model_kw or {})
+        model_kw.setdefault("use_pallas", use_pallas)
+        self.use_pallas = model_kw["use_pallas"]
+        if self.bm is not None:
+            model_kw.setdefault("kv_probe", self.bm.sanitize)
+        self._kv_probe = bool(model_kw.get("kv_probe", False))
+        self.model = build_model(cfg, **model_kw)
+        if kv_layout == "paged":
             self.cache = self.model.init_cache(
                 max_batch, max_len, vector_pos=True, kv_layout="paged",
                 n_blocks=n_blocks, block_size=block_size)
@@ -226,8 +244,6 @@ class Engine:
                 from repro.serving.prefix_index import PrefixIndex
                 self._prefix = PrefixIndex(block_size, self.bm)
                 self.bm.on_reuse = self._prefix.invalidate_block
-        elif prefix_share:
-            raise ValueError("prefix_share requires kv_layout='paged'")
         elif cfg.is_encdec:
             self.cache = self.model.init_cache(max_batch, max_len,
                                                s_enc=self.enc_frames,
@@ -264,6 +280,30 @@ class Engine:
             self.stats.prefill_retraces += 1
             return self.model.prefill_chunk(params, cache, tokens, base,
                                             last_pos=last_pos)
+
+        def chunk_paged_fn(params, cache, tokens, base, last_idx, rem,
+                           tbls):
+            # direct paged chunking: the chunk's K/V land in the owning
+            # slots' pool blocks as they are computed, each row routed
+            # through a snapshot of its slot's block table — no transient
+            # group cache, no terminal scatter. ``rem`` masks columns past
+            # a row's remaining tokens (and whole finished rows, rem=0)
+            # into the trash block.
+            self.stats.retraces += 1
+            self.stats.prefill_retraces += 1
+            return self.model.prefill_chunk(params, cache, tokens, base,
+                                            last_pos=last_idx,
+                                            block_tbl=tbls, lens=rem)
+
+        def enc_warm_fn(params, frames):
+            # chunked enc-dec prefill: the transient group cache needs the
+            # cross-attention K/V resident before the first decoder chunk
+            self.stats.retraces += 1
+            cache = self.model.init_cache(frames.shape[0], self.max_len,
+                                          s_enc=self.enc_frames)
+            enc_out = self.model.encode(params, frames)
+            cache["ck"], cache["cv"] = self.model.cross_kv(params, enc_out)
+            return cache
 
         def scatter_contig_fn(cache, group, slots, rows, lens):
             # Install ``group`` (batch G, possibly with pad rows remapped to
@@ -305,11 +345,24 @@ class Engine:
 
         def decode_fn(params, cache, tokens, live):
             self.stats.retraces += 1
-            logits, new_cache = self.model.decode_step(params, cache, tokens)
+            pos0 = cache["pos"]
+            if "block_tbl" in cache:
+                # dead/pending rows must not write their (masked, garbage)
+                # token through their tables: mid-chunk pending slots hold
+                # LIVE in-place chunk KV now, so route those writes to the
+                # trash block instead
+                tbl = cache["block_tbl"]
+                cache = dict(cache,
+                             block_tbl=jnp.where(live[:, None], tbl, 0))
+                logits, new_cache = self.model.decode_step(params, cache,
+                                                           tokens)
+                new_cache["block_tbl"] = tbl
+            else:
+                logits, new_cache = self.model.decode_step(params, cache,
+                                                           tokens)
             # dead slots: freeze the cache position instead of advancing on
             # a dummy token (their rows are fully overwritten on reuse)
-            new_cache["pos"] = jnp.where(live, new_cache["pos"],
-                                         cache["pos"])
+            new_cache["pos"] = jnp.where(live, new_cache["pos"], pos0)
             return logits, new_cache
 
         def suffix_fn(params, cache, tokens, bases, lens, slots, tbls):
@@ -342,15 +395,38 @@ class Engine:
 
         self._prefill_b = jax.jit(prefill_fn)
         self._chunk = jax.jit(chunk_fn, donate_argnums=(1,))
+        self._enc_warm = jax.jit(enc_warm_fn)
         # the group cache is NOT donated: a pending group's cache outlives
         # the scatter of its early finishers
         scatter = (scatter_paged_fn if kv_layout == "paged"
                    else scatter_contig_fn)
         self._scatter = jax.jit(scatter, donate_argnums=(0,))
-        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
-        self._suffix = jax.jit(suffix_fn, donate_argnums=(1,))
+        # with the poison probe armed these dispatches read through block
+        # tables and carry checkify.checks; _run discharges the error
+        if self._kv_probe:
+            from jax.experimental import checkify
+
+            def probed(f):
+                return checkify.checkify(f, errors=checkify.user_checks)
+        else:
+            def probed(f):
+                return f
+        self._decode = jax.jit(probed(decode_fn), donate_argnums=(1,))
+        self._suffix = jax.jit(probed(suffix_fn), donate_argnums=(1,))
+        self._chunk_paged = jax.jit(probed(chunk_paged_fn),
+                                    donate_argnums=(1,))
         self._cow = jax.jit(cow_fn, donate_argnums=(0,))
         self._warm = jax.jit(warm_fn, donate_argnums=(0,))
+
+    def _run(self, fn, *args):
+        """Dispatch a (possibly checkify'd) jit: with the poison probe
+        armed the device-side checks are discharged here — sanitize/debug
+        mode only, the probe-off hot path pays no extra sync."""
+        if not self._kv_probe:
+            return fn(*args)
+        err, out = fn(*args)
+        err.throw()
+        return out
 
     # -- buckets ----------------------------------------------------------------
     def bucket_lens(self) -> List[int]:
@@ -372,8 +448,10 @@ class Engine:
 
     def _use_chunked(self, n: int) -> bool:
         # MoE excluded: per-chunk expert capacity differs from full-prefill
-        # capacity, changing token drops (same exactness issue as padding)
-        if (self.prefill_chunk <= 0 or self.cfg.is_encdec
+        # capacity, changing token drops (same exactness issue as padding).
+        # Enc-dec chunks fine: the cross-attention cache is warmed once at
+        # group creation and the decoder chunks like any attention family.
+        if (self.prefill_chunk <= 0
                 or self.cfg.family in ("ssm", "hybrid") or self._moe):
             return False
         n_chunks = -(-n // self.prefill_chunk)
@@ -636,8 +714,8 @@ class Engine:
         lens[n:] = lens[0]
         slots[n:] = slots[0]
         tbls = self.bm.table[slots]
-        logits, self.cache = self._suffix(
-            self.params, self.cache, jnp.asarray(tokens),
+        logits, self.cache = self._run(
+            self._suffix, self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(bases), jnp.asarray(lens), jnp.asarray(slots),
             jnp.asarray(tbls))
         # jaxlint: disable=host-sync -- intended: sampled first tokens
@@ -721,28 +799,67 @@ class Engine:
                 self.cache[key] = scatter(self.cache[key], small, 1)
 
     # -- chunked prefill --------------------------------------------------------
+    def _chunk_init(self, g: int):
+        """Transient group cache for the contig chunked path (enc-dec
+        groups additionally warm the cross-attention cache with one
+        encoder pass over the stubbed frames)."""
+        if self.cfg.is_encdec:
+            frames = jnp.zeros((g, self.enc_frames, self.cfg.d_model),
+                               jnp.float32)
+            return self._enc_warm(self.params, frames)
+        return self.model.init_cache(g, self.max_len, ring=False)
+
     def _advance_pending(self) -> None:
         """One chunk of prefill work per pending GROUP, interleaved between
         decode steps (bounds head-of-line blocking; one dispatch covers
-        every member at the shared chunk boundary)."""
+        every member at the shared chunk boundary).
+
+        Paged engines write each chunk's K/V STRAIGHT into the owning
+        slots' pool blocks, routed through a snapshot of their block
+        tables — no transient group cache is ever allocated and finishing
+        needs no scatter (``stats.chunk_direct``). Contig engines keep the
+        transient-cache + terminal-scatter path (the A/B baseline, and the
+        only option without block routing)."""
         c = self.prefill_chunk
         still: List[_PendingGroup] = []
         for grp in self._pending:
             g = len(grp.members)
-            if grp.cache is None:
-                grp.cache = self.model.init_cache(g, self.max_len,
-                                                  ring=False)
             chunk = np.zeros((g, c), np.int32)
             last_idx = np.zeros((g,), np.int32)
+            rem = np.zeros((g,), np.int32)
             for j, m in enumerate(grp.members):
                 if m.done:
                     continue        # finished early: row computes pad zeros
                 end = min(grp.base + c, len(m.tokens))
                 chunk[j, :end - grp.base] = m.tokens[grp.base:end]
                 last_idx[j] = min(c - 1, len(m.tokens) - 1 - grp.base)
-            logits, grp.cache = self._chunk(
-                self.params, grp.cache, jnp.asarray(chunk),
-                jnp.asarray(grp.base, jnp.int32), jnp.asarray(last_idx))
+                rem[j] = end - grp.base
+            if self.bm is not None:
+                # snapshot the members' table rows; finished members (whose
+                # slots now decode, or may even have been reused) are routed
+                # wholesale to the trash block — their rows compute don't-care
+                tbls = self.bm.table[
+                    [m.slot for m in grp.members]].copy()
+                tbls[rem == 0] = 0
+                if self.bm.sanitize:
+                    for j, m in enumerate(grp.members):
+                        if rem[j]:
+                            # jaxlint: disable=host-sync -- host numpy rem
+                            # (sanitizer-armed debug path only)
+                            hi = grp.base + int(rem[j])
+                            self.bm.check_write(m.slot, grp.base, hi)
+                logits, self.cache = self._run(
+                    self._chunk_paged, self.params, self.cache,
+                    jnp.asarray(chunk), jnp.asarray(grp.base, jnp.int32),
+                    jnp.asarray(last_idx), jnp.asarray(rem),
+                    jnp.asarray(tbls))
+                self.stats.chunk_direct += 1
+            else:
+                if grp.cache is None:
+                    grp.cache = self._chunk_init(g)
+                logits, grp.cache = self._chunk(
+                    self.params, grp.cache, jnp.asarray(chunk),
+                    jnp.asarray(grp.base, jnp.int32), jnp.asarray(last_idx))
             self.stats.prefill_chunks += 1
             grp.base += c
             finishers = [(j, m) for j, m in enumerate(grp.members)
@@ -758,12 +875,19 @@ class Engine:
 
     def _finish_pending(self, grp: _PendingGroup, finishers, first
                         ) -> None:
-        """Scatter fully-prefilled members out of the group cache into
-        their slots (one fused dispatch for all of this step's finishers)."""
+        """Finish fully-prefilled members. Paged groups already wrote every
+        chunk in place through the block tables — only the per-slot cache
+        positions need setting; contig groups scatter out of the transient
+        group cache (one fused dispatch for this step's finishers)."""
         slots = np.array([m.slot for _, m in finishers], np.int32)
-        rows = np.array([j for j, _ in finishers], np.int32)
         lens = np.array([len(m.tokens) for _, m in finishers], np.int32)
-        self._scatter_group(grp.cache, slots, rows, lens)
+        if self.bm is not None:
+            self.cache["pos"] = self.cache["pos"].at[
+                jnp.asarray(slots)].set(jnp.asarray(lens))
+        else:
+            rows = np.array([j for j, _ in finishers], np.int32)
+            self._scatter_group(grp.cache, slots, rows, lens)
+            self.stats.chunk_scatters += 1
         for j, m in finishers:
             m.done = True
             self.slots[m.slot] = None     # _install re-marks the slot
@@ -884,9 +1008,9 @@ class Engine:
                 self.bm.check_write(i, self.slots[i].ctx_len - 1,
                                     self.slots[i].ctx_len)
         self._sync_block_tbl()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(tokens),
-                                          jnp.asarray(mask))
+        logits, self.cache = self._run(self._decode, self.params,
+                                       self.cache, jnp.asarray(tokens),
+                                       jnp.asarray(mask))
         # jaxlint: disable=host-sync -- intended: THE per-step sync point.
         # Sampled tokens feed the next step's host-side scheduling; every
         # other sync in step() has been eliminated, so the pipeline stalls

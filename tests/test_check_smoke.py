@@ -10,8 +10,8 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT))
 
 from benchmarks.check_smoke import (TRACKED, check_baseline,  # noqa: E402
-                                    check_routing, derived_floats,
-                                    parse_rows)
+                                    check_kernels, check_routing,
+                                    derived_floats, parse_rows)
 
 BASELINE_CSV = ROOT / "benchmarks" / "baselines.csv"
 
@@ -21,6 +21,7 @@ kv_paging/lazy_capacity,0.0,upfront=8 lazy=12 ratio=1.50x identical=1
 prefix_share/capacity,0.0,noshare=14 share=24 ratio=1.71x
 prefix_share/identity,0.0,identical=1 reduction=0.450
 routing/cost,0.0,ratio=0.400 identical=1
+kernels/chunk_dispatch,0.0,direct=9 scatter=2 reduction=1.22x identical=1
 """
 
 
@@ -89,6 +90,33 @@ def test_committed_baseline_is_complete_and_self_consistent():
         assert name in by_name, f"baseline missing tracked row {name}"
         assert key in derived_floats(by_name[name]), (name, key)
     assert check_baseline(rows, rows) == []
+
+
+def test_kernels_floor_bites():
+    ok_rows = (
+        "kernels/chunk/jnp,1300.0,tok_s=95000\n"
+        "kernels/chunk/pallas,8400.0,tok_s=15000 speedup=0.16x interp=1\n"
+        "kernels/decode/jnp,260.0,tok_s=7600\n"
+        "kernels/decode/pallas,4500.0,tok_s=440 speedup=0.06x interp=1\n"
+        "kernels/chunk_dispatch,0.0,direct=9 scatter=2 contig_ops=11 "
+        "paged_ops=9 reduction=1.22x identical=1\n")
+    assert check_kernels(parse_rows(ok_rows)) == []
+    # interpret mode exempts the speedup floor; a real accelerator doesn't
+    on_dev = ok_rows.replace("speedup=0.16x interp=1",
+                             "speedup=0.16x interp=0")
+    assert any("speedup" in f for f in check_kernels(parse_rows(on_dev)))
+    fast_dev = ok_rows.replace("speedup=0.16x interp=1",
+                               "speedup=2.40x interp=0")
+    assert check_kernels(parse_rows(fast_dev)) == []
+    slow = ok_rows.replace("tok_s=95000", "tok_s=4000")
+    assert any("floor" in f for f in check_kernels(parse_rows(slow)))
+    diverged = ok_rows.replace("identical=1", "identical=0")
+    assert any("diverged" in f for f in check_kernels(parse_rows(diverged)))
+    no_gain = ok_rows.replace("reduction=1.22x", "reduction=1.00x")
+    assert any("reduction" in f for f in check_kernels(parse_rows(no_gain)))
+    assert any("chunk_dispatch" in f
+               for f in check_kernels(parse_rows(ok_rows.rsplit(
+                   "kernels/chunk_dispatch", 1)[0])))
 
 
 def test_routing_floor_bites():

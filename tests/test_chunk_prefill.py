@@ -1,0 +1,212 @@
+"""Direct-to-pool chunked prefill: paged engines land every prefill chunk
+straight in the slot's pool blocks (no transient group cache, no terminal
+scatter).  Pins byte-identity against the contig transient+scatter baseline
+across staggered admissions, Pallas vs jnp reads, prefix sharing,
+preemption churn, and enc-dec chunking, plus the device-side poison probe
+that checkifies gathered KV against the sanitizer's KV_POISON sentinel.
+"""
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import Engine, ServeRequest
+from repro.serving.kv_blocks import KV_POISON
+
+
+def _params_for(cfg):
+    m = build_model(cfg, remat=False, attn_chunk=0)
+    return m.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2-1.8b").reduced()
+    return cfg, _params_for(cfg)
+
+
+def test_direct_paged_matches_contig_scatter(setup):
+    """Greedy outputs are byte-identical between the paged direct-write
+    chunk path and the contig transient+scatter path on staggered
+    mixed-length admissions — and the stats counters prove which path
+    each engine actually took."""
+    cfg, params = setup
+    outs, engines = {}, {}
+    for layout in ("contig", "paged"):
+        eng = Engine(cfg, params, max_batch=4, max_len=64,
+                     prefill_chunk=8, kv_layout=layout)
+        rs = [ServeRequest(prompt=list(range(1 + i, 30 + 3 * i)),
+                           max_new_tokens=4 + i) for i in range(4)]
+        eng.admit_many(rs[:2])
+        eng.step()
+        eng.admit_many(rs[2:])
+        eng.drain()
+        outs[layout] = [list(r.generated) for r in rs]
+        engines[layout] = eng
+    assert outs["paged"] == outs["contig"]
+    assert engines["paged"].stats.chunk_direct > 0
+    assert engines["paged"].stats.chunk_scatters == 0
+    assert engines["contig"].stats.chunk_direct == 0
+    assert engines["contig"].stats.chunk_scatters > 0
+
+
+def test_direct_paged_pallas_matches_jnp(setup):
+    """use_pallas routes the chunk dispatch through the flash paged chunk
+    kernel (interpret mode on CPU); tokens must match the jnp oracle
+    engine exactly."""
+    cfg, params = setup
+
+    def gen(**kw):
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     prefill_chunk=8, kv_layout="paged", **kw)
+        rs = [ServeRequest(prompt=list(range(1, 42)), max_new_tokens=6),
+              ServeRequest(prompt=list(range(3, 20)), max_new_tokens=4)]
+        eng.admit_many(rs)
+        eng.drain()
+        assert eng.stats.chunk_direct > 0
+        return [list(r.generated) for r in rs]
+    assert gen(use_pallas=True) == gen()
+
+
+def test_direct_chunk_with_prefix_share(setup):
+    """Chunked prefill composes with prefix sharing: shared-prefix
+    admissions under share=on match share=off byte-for-byte while still
+    taking the direct chunk path for the unshared members."""
+    cfg, params = setup
+    common = list(range(1, 25))
+
+    def gen(share):
+        eng = Engine(cfg, params, max_batch=4, max_len=64, prefill_chunk=8,
+                     kv_layout="paged", prefix_share=share)
+        rs = [ServeRequest(prompt=common + [40 + i], max_new_tokens=5)
+              for i in range(3)]
+        eng.admit(rs[0])
+        eng.drain()                     # first run warms the prefix index
+        eng.admit_many(rs[1:])
+        eng.drain()
+        assert eng.bm.check_no_leak()
+        return [list(r.generated) for r in rs]
+    assert gen(True) == gen(False)
+
+
+def test_direct_chunk_survives_preemption_churn(setup):
+    """An overcommitted pool preempts while chunked prefills are in
+    flight; the direct-write path (pool blocks ARE the cache) must stay
+    byte-identical to an unconstrained run through the export/attach
+    round trip."""
+    cfg, params = setup
+
+    def gen(**kw):
+        eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                     prefill_chunk=8, **kw)
+        rs = [ServeRequest(prompt=list(range(1, 28 + 4 * i)),
+                           max_new_tokens=12) for i in range(3)]
+        assert len(eng.admit_many(rs)) == 3
+        eng.drain()
+        assert all(r.done for r in rs)
+        assert eng.bm.check_no_leak() and eng.bm.blocks_in_use() == 0
+        return eng, [list(r.generated) for r in rs]
+
+    _, ref = gen()
+    eng, out = gen(n_blocks=15, kv_overcommit=2.5)
+    assert out == ref
+    assert eng.stats.chunk_direct > 0
+    assert eng.stats.preemptions >= 1
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_poison_probe_trips_on_corrupted_block(setup, use_pallas):
+    """With the sanitizer armed, the decode dispatch carries a device-side
+    probe: poison planted in a mapped (readable) pool block raises at the
+    very step that reads it, on both the jnp oracle and the Pallas kernel
+    path."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, block_size=8,
+                 kv_sanitize=True, use_pallas=use_pallas)
+    req = ServeRequest(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=8)
+    assert eng.admit(req)
+    eng.step()
+    slot = next(i for i, r in enumerate(eng.slots) if r is req)
+    blk = int(eng.bm.table[slot, 0])
+    eng.cache["k"] = eng.cache["k"].at[:, blk].set(KV_POISON)
+    with pytest.raises(Exception, match="poisoned KV block"):
+        eng.step()
+
+
+def test_poison_probe_trips_mid_chunk(setup):
+    """The chunk dispatch probes too: corrupting an already-written block
+    of a mid-prefill slot fires on the next chunk, not only at decode."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, block_size=8,
+                 prefill_chunk=8, kv_sanitize=True)
+    req = ServeRequest(prompt=list(range(1, 42)), max_new_tokens=4)
+    assert eng.admit(req)
+    eng.step()                                   # first chunk written
+    assert not req.generated                     # still mid-prefill
+    slot = eng._pending[0].members[0].slot
+    blk = int(eng.bm.table[slot, 0])
+    eng.cache["v"] = eng.cache["v"].at[:, blk].set(-KV_POISON)
+    with pytest.raises(Exception, match="poisoned KV block"):
+        eng.step()
+
+
+def test_probe_off_by_default(setup):
+    """Without kv_sanitize the probe is dark: same corruption decodes
+    garbage-free-of-exceptions (byte identity is the sanitizer's job)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=2, max_len=64, block_size=8)
+    req = ServeRequest(prompt=[1, 2, 3, 4, 5, 6], max_new_tokens=4)
+    assert eng.admit(req)
+    eng.step()
+    slot = next(i for i, r in enumerate(eng.slots) if r is req)
+    blk = int(eng.bm.table[slot, 0])
+    eng.cache["k"] = eng.cache["k"].at[:, blk].set(KV_POISON)
+    eng.step()                                   # must not raise
+    assert not eng._kv_probe
+
+
+def test_encdec_chunked_prefill_matches_full():
+    """Enc-dec engines chunk their decoder prefill now (the cross-attn
+    cache threads through the chunk body): outputs byte-identical to the
+    one-shot prefill engine, with chunks actually dispatched."""
+    cfg = get_config("whisper-tiny").reduced()
+    params = _params_for(cfg)
+
+    def gen(chunk):
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     prefill_chunk=chunk)
+        rs = [ServeRequest(prompt=list(range(1, 38)), max_new_tokens=6),
+              ServeRequest(prompt=list(range(2, 14)), max_new_tokens=4)]
+        eng.admit_many(rs)
+        eng.drain()
+        return eng, [list(r.generated) for r in rs]
+
+    eng_c, chunked = gen(8)
+    _, full = gen(0)
+    assert chunked == full
+    assert eng_c.stats.prefill_chunks > 0
+
+
+def test_encdec_chunk_interleaves_with_decode():
+    """A live enc-dec request keeps decoding while a long admission
+    chunk-prefills beside it."""
+    cfg = get_config("whisper-tiny").reduced()
+    params = _params_for(cfg)
+    eng = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=8)
+    short = ServeRequest(prompt=[1, 2, 3], max_new_tokens=8)
+    eng.admit(short)
+    eng.step()
+    long = ServeRequest(prompt=list(range(1, 38)), max_new_tokens=4)
+    eng.admit(long)
+    eng.step()
+    assert len(short.generated) >= 2 and not long.generated
+    eng.drain()
+
+    for r in (short, long):
+        solo = Engine(cfg, params, max_batch=2, max_len=64)
+        r2 = ServeRequest(prompt=list(r.prompt),
+                          max_new_tokens=r.max_new_tokens)
+        solo.admit(r2)
+        solo.drain()
+        assert list(r.generated) == list(r2.generated)

@@ -164,6 +164,45 @@ def test_custom_objective_falls_back_to_reference():
     assert res.placement is not None
 
 
+HIST_MATRIX = [
+    ((6, 256, 4, 2, 512, 1000), {"g6e.xlarge": 2, "g6.12xlarge": 1}, 2),
+    ((8, 512, 8, 4, 2048, 32000), {"g6.12xlarge": 2, "g5.12xlarge": 1}, 3),
+    ((8, 512, 8, 4, 2048, 32000), {"g6e.xlarge": 3}, 2),
+]
+
+
+@pytest.mark.parametrize("args,inv,k", HIST_MATRIX)
+def test_histogram_objective_search_equivalence(args, inv, k):
+    """HistogramCostObjective rides the fast DP path — the incremental
+    composition replayed per traffic bucket against that bucket's tables —
+    and must land on the reference scorer's search optimum.  Dominance
+    pruning is left at its default: histogram mode bypasses it
+    internally, so this also pins that bypass."""
+    from repro.core.buckets import (HistogramCostObjective,
+                                    workload_histogram)
+    spec = uniform_decoder("m", *args)
+    hist = workload_histogram(
+        [(100, 50)] * 6 + [(700, 200)] * 3 + [(1800, 900)])
+    obj = HistogramCostObjective(hist)
+    common = dict(objective=obj, beam_k=k, max_stages=3)
+    ref = PlacementOptimizer(spec, inv, AWS_INSTANCES, 763, 232,
+                             use_fast=False, **common).search()
+    fast_opt = PlacementOptimizer(spec, inv, AWS_INSTANCES, 763, 232,
+                                  **common)
+    assert fast_opt.use_fast            # histogram no longer falls back
+    fast = fast_opt.search()
+    assert (fast.placement is None) == (ref.placement is None)
+    if ref.placement is None:
+        return
+    assert fast.score == pytest.approx(ref.score, rel=REL), (
+        fast.placement.describe(), ref.placement.describe())
+    # the fast score must be the histogram scorer's own number for the
+    # winning placement, not merely close to the reference search's
+    rescored = obj.score(fast.placement,
+                         estimate(spec, fast.placement, 763, 232))
+    assert fast.score == pytest.approx(rescored, rel=REL)
+
+
 def test_slo_objective_equivalence():
     """Eq. 7 with a soft SLO penalty goes through the fast path too."""
     spec = uniform_decoder("m", 8, 512, 8, 4, 2048, 32000)

@@ -7,9 +7,13 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref as kref
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.chunk_attention import (chunk_attention,
+                                           chunk_attention_paged)
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_paged)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
+from repro.models import attention as mattn
 
 RNG = np.random.RandomState(42)
 
@@ -59,6 +63,110 @@ def test_decode_attention_sweep(b, s, nh, nkv, d, window, vecpos, dtype):
     ref = kref.decode_attention_ref(q, ck, cv, pos, window=window)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,c,s,nh,nkv,d,window,vecbase",
+    [
+        (2, 128, 256, 4, 4, 64, None, False),    # MHA, scalar base
+        (2, 128, 256, 4, 2, 64, None, True),     # GQA, per-row bases
+        (1, 128, 256, 6, 6, 64, 32, False),      # SWA
+        (2, 256, 512, 8, 2, 128, None, True),    # GQA, d=128, 2 q-tiles
+        (1, 64, 128, 2, 1, 32, None, False),     # sub-tile chunk
+    ])
+def test_chunk_attention_sweep(b, c, s, nh, nkv, d, window, vecbase, dtype):
+    """Flash chunk kernel (linear cache) == jnp chunk oracle across
+    GQA/MHA/windowed x scalar-base/per-row-bases."""
+    q = jnp.asarray(RNG.randn(b, c, nh, d), dtype)
+    ck = jnp.asarray(RNG.randn(b, s, nkv, d), dtype)
+    cv = jnp.asarray(RNG.randn(b, s, nkv, d), dtype)
+    bases = (jnp.asarray(RNG.randint(0, s - c + 1, (b,)), jnp.int32)
+             if vecbase else jnp.asarray(s - c, jnp.int32))
+    out = chunk_attention(q, ck, cv, bases, window=window, interpret=True)
+    q_pos = (jnp.broadcast_to(bases, (b,))[:, None]
+             + jnp.arange(c)[None]).astype(jnp.int32)
+    ref = mattn.chunk_attention(q, ck, cv, q_pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def _pool(b, mb, block, nkv, d, dtype):
+    """Random block pool + per-row table of distinct pool blocks (block 0
+    reserved as trash, never mapped here)."""
+    n_blocks = 1 + b * mb
+    pk = jnp.asarray(RNG.randn(n_blocks, block, nkv, d), dtype)
+    pv = jnp.asarray(RNG.randn(n_blocks, block, nkv, d), dtype)
+    tbl = jnp.asarray(RNG.permutation(b * mb).reshape(b, mb) + 1, jnp.int32)
+    return pk, pv, tbl
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,c,nh,nkv,d,window,vecbase",
+    [
+        (2, 128, 4, 4, 64, None, False),         # MHA, scalar base
+        (2, 128, 4, 2, 64, None, True),          # GQA, per-row bases
+        (1, 128, 6, 6, 64, 32, False),           # SWA
+        (2, 64, 8, 2, 128, None, True),          # GQA, d=128, sub-tile
+    ])
+def test_chunk_attention_paged_sweep(b, c, nh, nkv, d, window, vecbase,
+                                     dtype):
+    """Flash chunk kernel walking the block pool via scalar-prefetched
+    block tables == jnp paged oracle (which gathers a page view)."""
+    block, mb = 64, 4                            # virtual length 256
+    pk, pv, tbl = _pool(b, mb, block, nkv, d, dtype)
+    s_virt = block * mb
+    q = jnp.asarray(RNG.randn(b, c, nh, d), dtype)
+    bases = (jnp.asarray(RNG.randint(0, s_virt - c + 1, (b,)), jnp.int32)
+             if vecbase else jnp.asarray(s_virt - c, jnp.int32))
+    out = chunk_attention_paged(q, pk, pv, tbl, bases, window=window,
+                                interpret=True)
+    q_pos = (jnp.broadcast_to(bases, (b,))[:, None]
+             + jnp.arange(c)[None]).astype(jnp.int32)
+    ref = mattn.chunk_attention_paged(q, pk, pv, tbl, q_pos, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_chunk_paged_probe_flags_readable_poison():
+    """The kernel's sanitizer probe reports max |K|/|V| over mask-readable
+    positions only: poison in a readable block trips the KV_POISON
+    threshold, poison parked beyond every query's causal horizon stays
+    invisible."""
+    from repro.serving.kv_blocks import KV_POISON
+    b, c, nh, nkv, d, block, mb = 1, 64, 4, 2, 32, 64, 4
+    pk, pv, tbl = _pool(b, mb, block, nkv, d, jnp.float32)
+    q = jnp.asarray(RNG.randn(b, c, nh, d), jnp.float32)
+    bases = jnp.asarray(0, jnp.int32)        # queries cover block 0 only
+    poisoned_hot = pk.at[tbl[0, 0]].set(KV_POISON)
+    _, pmax = chunk_attention_paged(q, poisoned_hot, pv, tbl, bases,
+                                    probe=True, interpret=True)
+    assert float(jnp.max(pmax)) >= KV_POISON
+    poisoned_cold = pk.at[tbl[0, 3]].set(KV_POISON)   # unreadable tail
+    out, pmax = chunk_attention_paged(q, poisoned_cold, pv, tbl, bases,
+                                      probe=True, interpret=True)
+    assert float(jnp.max(pmax)) < KV_POISON
+    clean = chunk_attention_paged(q, pk, pv, tbl, bases, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(clean),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_paged_probe_flags_readable_poison():
+    """Same probe contract on the paged decode kernel (C=1)."""
+    from repro.serving.kv_blocks import KV_POISON
+    b, nh, nkv, d, block, mb = 2, 4, 2, 32, 16, 4
+    pk, pv, tbl = _pool(b, mb, block, nkv, d, jnp.float32)
+    q = jnp.asarray(RNG.randn(b, 1, nh, d), jnp.float32)
+    pos = jnp.asarray([block - 1, block * mb - 1], jnp.int32)
+    poisoned = pv.at[tbl[0, 2]].set(-KV_POISON)  # row 0 can't read blk 2
+    _, pmax = decode_attention_paged(q, pk, poisoned, tbl, pos,
+                                     probe=True, interpret=True)
+    assert float(jnp.max(pmax)) < KV_POISON
+    poisoned = pv.at[tbl[1, 2]].set(-KV_POISON)  # row 1 reads everything
+    _, pmax = decode_attention_paged(q, pk, poisoned, tbl, pos,
+                                     probe=True, interpret=True)
+    assert float(jnp.max(pmax)) >= KV_POISON
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

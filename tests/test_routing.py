@@ -104,16 +104,16 @@ def test_cost_objective_ranks_cheap_above_fast():
 
 
 def test_optimizer_picks_cheap_mix_under_cost_objective():
-    """PlacementOptimizer consumes the histogram $/token objective
-    (reference scoring path) and answers 'which mix is cheapest': the
-    cheap instance wins the whole pipeline."""
+    """PlacementOptimizer consumes the histogram $/token objective (now on
+    the fast per-bucket-table path) and answers 'which mix is cheapest':
+    the cheap instance wins the whole pipeline."""
     hist = workload_histogram([(100, 50)] * 8 + [(1500, 800)] * 2)
     insts = {CHEAP.name: CHEAP, FAST.name: FAST}
     inv = {CHEAP.name: 1, FAST.name: 1}
     opt = PlacementOptimizer(SPEC, inv, insts, 763, 232,
                              objective=HistogramCostObjective(hist),
                              beam_k=2, max_stages=2)
-    assert not opt.use_fast                 # subclass -> reference path
+    assert opt.use_fast                 # histogram rides the fast DP path
     res = opt.search()
     assert res.placement is not None
     used = {s.instance.name for s in res.placement.stages}

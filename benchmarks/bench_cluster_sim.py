@@ -1,0 +1,180 @@
+"""Discrete-event cluster simulator suite: closed-form parity in the
+uncontended limit, store-link contention under simultaneous warm-ups,
+1000-node multi-region churn wall-clock, and the cost-vs-SLO frontier.
+
+Rows (enforced by check_smoke):
+  cluster_sim/parity      — max |DES - closed form| over scenario metrics
+                            (rps / total downtime / $), must stay <= 1e-6
+  cluster_sim/contention  — downtime ratio, two simultaneous warm-ups on
+                            one store link vs the uncontended closed form
+                            (deterministic; tracked, floor 1.1x)
+  cluster_sim/churn       — 1000 pipelines, 2 regions, correlated spot
+                            reclaims from a crunchy multi-region trace;
+                            wall-clock budgeted, >= 50 correlated drops
+  cluster_sim/frontier    — spot-mix x grace x policy sweep; tracked
+                            saving = all-OD $ / all-spot $ (> 1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+from benchmarks.common import (Rows, effective_instances, full_mode,
+                               paper_inventory, save_json)
+from repro.cluster import (ClusterSim, FTConfig, RegionSpec, Topology,
+                           azure_conversation_like,
+                           correlated_interruption_count,
+                           generate_multi_region_trace, pareto_front,
+                           sweep_frontier)
+from repro.cluster.spot_trace import PoolModel
+from repro.configs import get_config
+from repro.core import Placement, Stage, populate_cluster
+from repro.core.modelspec import uniform_decoder
+from repro.hw.profiles import DeviceProfile, InstanceProfile
+
+TINY = uniform_decoder("sim-4l", 4, 2048, 16, 16, 8192, 32000)
+
+
+def _inst(name: str) -> InstanceProfile:
+    dev = DeviceProfile(f"{name}-dev", 24.0, 100e12, 800e9, 5e-6, 32e9)
+    return InstanceProfile(name, dev, 1, 5e-5, 25e9 / 8, 2.0, 0.7, name)
+
+
+def _single(inst) -> Placement:
+    return Placement(
+        TINY, (Stage(inst, 1, TINY.n_layers, first=True, last=True),))
+
+
+PL_A = _single(_inst("sim-a"))
+PL_B = _single(_inst("sim-b"))
+
+
+def parity(rows: Rows) -> Dict:
+    """DES vs closed form on the paper cluster: the uncontended-limit
+    equivalence the refactor promises (full matrix in tests)."""
+    spec = get_config("qwen3-32b").to_modelspec()
+    plan = populate_cluster(spec, paper_inventory(), effective_instances(),
+                            763, 232, beam_k=1)
+    pool = plan.pipelines[0].stages[0].instance.name
+    events = [(120.0, pool, -1), (300.0, pool, -1)]
+    scenarios = {
+        "shunt": FTConfig(),
+        "no_ci": FTConfig(concurrent_init=False),
+        "hybrid_kv": FTConfig(recovery_policy="hybrid",
+                              kv_store_migration=True),
+    }
+    reqs = azure_conversation_like(duration_s=600.0, rate_rps=3.0, seed=3)
+    deltas = {"rps": 0.0, "downtime": 0.0, "cost": 0.0}
+    t0 = time.perf_counter()
+    for ft in scenarios.values():
+        base = ClusterSim(spec, plan.pipelines, ft).run(
+            reqs, 600.0, events=events)
+        des = ClusterSim(spec, plan.pipelines, ft, network=Topology()).run(
+            reqs, 600.0, events=events)
+        deltas["rps"] = max(deltas["rps"], abs(des.rps - base.rps))
+        deltas["downtime"] = max(deltas["downtime"],
+                                 abs(des.total_downtime_s
+                                     - base.total_downtime_s))
+        deltas["cost"] = max(deltas["cost"],
+                             abs(des.cost_usd - base.cost_usd))
+    us = (time.perf_counter() - t0) * 1e6
+    ok = int(all(d <= 1e-6 for d in deltas.values()))
+    rows.add("cluster_sim/parity", us,
+             f"ok={ok} scenarios={len(scenarios)} "
+             f"rps_delta={deltas['rps']:.2e} "
+             f"downtime_delta={deltas['downtime']:.2e} "
+             f"cost_delta={deltas['cost']:.2e}")
+    return {"ok": ok, **deltas}
+
+
+def contention(rows: Rows) -> Dict:
+    """Two replacements warming from one store link at the same instant:
+    serialized transfers extend real downtime past the closed form."""
+    ft = FTConfig(grace_period_s=30.0, node_provision_s=40.0,
+                  store_load_s=60.0, engine_init_s=30.0)
+    reqs = azure_conversation_like(duration_s=400.0, rate_rps=0.5, seed=0)
+    events = [(100.0, "sim-a", -2)]
+    base = ClusterSim(TINY, [PL_A, PL_A], ft).run(
+        reqs, 400.0, events=events)
+    des = ClusterSim(TINY, [PL_A, PL_A], ft, network=Topology()).run(
+        reqs, 400.0, events=events)
+    ratio = des.total_downtime_s / max(base.total_downtime_s, 1e-9)
+    wait = des.link_stats["store:local"]["wait_s"]
+    rows.add("cluster_sim/contention", 0.0,
+             f"ratio={ratio:.3f}x base_s={base.total_downtime_s:.1f} "
+             f"des_s={des.total_downtime_s:.1f} wait_s={wait:.1f}")
+    return {"ratio": ratio, "base_s": base.total_downtime_s,
+            "des_s": des.total_downtime_s}
+
+
+def churn(rows: Rows) -> Dict:
+    """Scale row: 1000 pipelines across 2 regions driven by a crunchy
+    multi-region availability trace (correlated reclaims by
+    construction). The wall-clock budget protects the event core's
+    O(E log E) behavior at the paper's 100-1000-node operating range."""
+    n = 1000 if not full_mode() else 2000
+    half = n // 4  # per pool per region
+    pools = {
+        "sim-a": PoolModel("sim-a", half, 0.004, 0.05, 0.4),
+        "sim-b": PoolModel("sim-b", half, 0.004, 0.05, 0.4),
+    }
+    regions = [RegionSpec("us", pools, crunch_per_min=0.04),
+               RegionSpec("eu", pools, crunch_per_min=0.04)]
+    minutes = 30
+    trace = generate_multi_region_trace(regions, minutes=minutes, seed=11)
+    events = trace.events()
+    n_corr = correlated_interruption_count(events)
+    pls, regs = [], []
+    for i in range(n):
+        pls.append(PL_A if i % 2 == 0 else PL_B)
+        regs.append("us" if i < n // 2 else "eu")
+    sim = ClusterSim(TINY, pls, FTConfig(), network=Topology(),
+                     regions=regs)
+    reqs = azure_conversation_like(duration_s=minutes * 60.0,
+                                   rate_rps=30.0, seed=6)
+    t0 = time.perf_counter()
+    res = sim.run(reqs, minutes * 60.0, events=events)
+    wall = time.perf_counter() - t0
+    rows.add("cluster_sim/churn", wall * 1e6,
+             f"nodes={n} events={len(events)} correlated={n_corr} "
+             f"interruptions={res.interruptions} "
+             f"completed={len(res.completed)} transfers={res.transfers} "
+             f"wall_s={wall:.1f}")
+    return {"nodes": n, "correlated": n_corr, "wall_s": wall,
+            "interruptions": res.interruptions}
+
+
+def frontier(rows: Rows) -> Dict:
+    """Cost-vs-SLO sweep: spot mix x grace x recovery policy -> $/Mtok
+    vs p99 TTFT/TPOT. The tracked saving is the all-OD / all-spot cost
+    ratio at the base cell (spot discount must survive interruptions)."""
+    reqs = azure_conversation_like(duration_s=300.0, rate_rps=1.0, seed=4)
+    events = [(60.0, "sim-a", -1), (150.0, "sim-a", -1)]
+    t0 = time.perf_counter()
+    pts = sweep_frontier(
+        TINY, [PL_A, PL_A], reqs, 300.0, events=events,
+        spot_fracs=(0.0, 0.5, 1.0), graces=(30.0, 120.0),
+        policies=("recompute", "hybrid"), network_factory=Topology)
+    us = (time.perf_counter() - t0) * 1e6
+    front = pareto_front(pts)
+    by = {(p.spot_frac, p.grace_s, p.policy): p for p in pts}
+    od = by[(0.0, 30.0, "recompute")]
+    spot = by[(1.0, 30.0, "recompute")]
+    saving = od.cost_usd / max(spot.cost_usd, 1e-9)
+    best = min(front, key=lambda p: p.cost_per_mtok)
+    rows.add("cluster_sim/frontier", us,
+             f"points={len(pts)} front={len(front)} saving={saving:.3f}x "
+             f"best_usd_per_mtok={best.cost_per_mtok:.4f} "
+             f"best_p99_ttft_s={best.p99_ttft_s:.3f}")
+    save_json("cluster_sim_frontier.json",
+              [dataclasses.asdict(p) for p in pts])
+    return {"points": len(pts), "front": len(front), "saving": saving}
+
+
+def run(rows: Rows) -> Dict:
+    out = {"parity": parity(rows), "contention": contention(rows),
+           "churn": churn(rows), "frontier": frontier(rows)}
+    save_json("cluster_sim.json", out)
+    return out

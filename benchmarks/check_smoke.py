@@ -35,6 +35,13 @@ Enforced floors:
     outputs, and the histogram $/token objective picks the cheap low-HBM
     instance for short-only traffic but high-HBM for the mixed histogram
     (protects length/cost-aware routing, bench_routing.py);
+  * the discrete-event cluster simulator reproduces the closed-form
+    metrics (rps / downtime / $) to 1e-6 on an idle topology, charges a
+    >= 1.1x downtime penalty when two warm-ups contend for one store
+    link, completes the 1000-node 2-region churn scenario (>= 50
+    correlated reclaims) inside a wall-clock budget, and keeps the
+    all-spot frontier cell cheaper than all-on-demand (protects the DES
+    refactor, bench_cluster_sim.py);
   * hot-path kernel dispatches keep oracle-path chunk and decode tok/s
     above CPU-enforceable floors, direct-to-pool chunked prefill cuts
     dispatch count vs the contig transient+scatter baseline with
@@ -62,6 +69,11 @@ MIN_CHUNK_TOK_S = 10_000.0            # oracle paged chunk-attn, CPU floor
 MIN_DECODE_TOK_S = 1_000.0            # oracle paged decode, CPU floor
 MIN_PALLAS_SPEEDUP = 1.0              # only enforced when interp=0
 MIN_CHUNK_DISPATCH_REDUCTION = 1.1    # direct vs transient+scatter ops
+PARITY_TOL = 1e-6                     # DES vs closed form, idle topology
+MIN_CONTENTION_RATIO = 1.1            # serialized warm-up downtime penalty
+MIN_CORRELATED_DROPS = 50             # churn trace must exercise crunches
+CHURN_BUDGET_S = 150.0                # 1000-node 30-min churn wall-clock
+MIN_FRONTIER_SAVING = 1.0             # all-OD $ / all-spot $ must be > 1
 
 # --baseline trend tracking: (row name, derived key, better direction).
 # Deterministic count-based ratios ONLY — wall-time metrics flake across
@@ -74,6 +86,8 @@ TRACKED = [
     ("prefix_share/identity", "reduction", "higher"),
     ("routing/cost", "ratio", "lower"),
     ("kernels/chunk_dispatch", "reduction", "higher"),
+    ("cluster_sim/contention", "ratio", "higher"),
+    ("cluster_sim/frontier", "saving", "higher"),
 ]
 
 
@@ -131,6 +145,7 @@ def check(rows: List[Tuple[str, float, str]]) -> List[str]:
     failures += check_prefix_share(rows)
     failures += check_routing(rows)
     failures += check_kernels(rows)
+    failures += check_cluster_sim(rows)
     errors = [n for n, _, _ in rows if n.endswith("/ERROR")]
     failures += [f"suite error row: {n}" for n in errors]
     return failures
@@ -318,6 +333,57 @@ def check_kernels(rows: List[Tuple[str, float, str]]) -> List[str]:
     if dvals.get("scatter", 0.0) <= 0.0:
         failures.append(
             f"contig baseline recorded no terminal scatters: {disp[0]}")
+    return failures
+
+
+def check_cluster_sim(rows: List[Tuple[str, float, str]]) -> List[str]:
+    failures = []
+    par = [(us, d) for n, us, d in rows if n == "cluster_sim/parity"]
+    if not par:
+        failures.append("no cluster_sim/parity row found")
+    else:
+        vals = derived_floats(par[0][1])
+        worst = max(vals.get("rps_delta", 1e9),
+                    vals.get("downtime_delta", 1e9),
+                    vals.get("cost_delta", 1e9))
+        if vals.get("ok", 0.0) != 1.0 or worst > PARITY_TOL:
+            failures.append(
+                f"DES diverged from closed form on an idle topology "
+                f"(max delta {worst:.2e} > {PARITY_TOL:.0e}): {par[0][1]}")
+    cont = [d for n, _, d in rows if n == "cluster_sim/contention"]
+    if not cont:
+        failures.append("no cluster_sim/contention row found")
+    else:
+        ratio = derived_floats(cont[0]).get("ratio", 0.0)
+        if ratio < MIN_CONTENTION_RATIO:
+            failures.append(
+                f"store-link contention downtime ratio {ratio}x < "
+                f"{MIN_CONTENTION_RATIO}x floor")
+    churn = [(us, d) for n, us, d in rows if n == "cluster_sim/churn"]
+    if not churn:
+        failures.append("no cluster_sim/churn row found")
+    else:
+        us, d = churn[0]
+        cvals = derived_floats(d)
+        if us > CHURN_BUDGET_S * 1e6:
+            failures.append(
+                f"1000-node churn took {us/1e6:.1f}s > "
+                f"{CHURN_BUDGET_S:.0f}s budget")
+        if cvals.get("correlated", 0.0) < MIN_CORRELATED_DROPS:
+            failures.append(
+                f"churn trace had {cvals.get('correlated')} correlated "
+                f"reclaims < {MIN_CORRELATED_DROPS} floor")
+    front = [d for n, _, d in rows if n == "cluster_sim/frontier"]
+    if not front:
+        failures.append("no cluster_sim/frontier row found")
+    else:
+        fvals = derived_floats(front[0])
+        if fvals.get("saving", 0.0) <= MIN_FRONTIER_SAVING:
+            failures.append(
+                f"frontier all-OD/all-spot saving {fvals.get('saving')}x "
+                f"<= {MIN_FRONTIER_SAVING}x (spot discount lost)")
+        if fvals.get("front", 0.0) <= 0.0:
+            failures.append(f"empty pareto front: {front[0]}")
     return failures
 
 

@@ -9,6 +9,7 @@ form by default; REPRO_FULL=1 enables paper-scale parameters.
   Fig 11 -> bench_beam_width              Table 4   -> bench_calibration
   §Roofline -> roofline_report            §4.2 search -> bench_search_speed
   §5 exec plane -> bench_engine_throughput
+  DES cluster sim -> bench_cluster_sim
   paged KV layout -> bench_kv_paging
   length/cost routing -> bench_routing
   hot-path kernels -> bench_kernels
@@ -38,6 +39,7 @@ def main() -> None:
         ("routing", "benchmarks.bench_routing"),
         ("placement", "benchmarks.bench_placement"),
         ("fault_tolerance", "benchmarks.bench_fault_tolerance"),
+        ("cluster_sim", "benchmarks.bench_cluster_sim"),
         ("init_overlap", "benchmarks.bench_init_overlap"),
         ("roofline", "benchmarks.roofline_report"),
     ]

@@ -1,12 +1,32 @@
+from repro.cluster.events import (Arrive, Event, EventQueue, Interrupt,
+                                  Revive, TransferDone, Wake)
+from repro.cluster.frontier import (FrontierPoint, pareto_front,
+                                    sweep_frontier)
+from repro.cluster.network import (LinkSpec, NetworkLink, Topology,
+                                   Transfer)
 from repro.cluster.simulator import ClusterSim, FTConfig, SimResult
 from repro.cluster.spot_trace import (PAPER_POOLS, AvailabilityTrace,
+                                      RegionSpec,
+                                      correlated_interruption_count,
+                                      generate_multi_region_trace,
                                       generate_trace,
                                       interruption_events_for_window,
-                                      select_scenario)
+                                      scaled_pools, select_scenario)
 from repro.cluster.workload import (Request, azure_conversation_like,
-                                    length_histogram)
+                                    diurnal_rate, length_histogram)
 
 __all__ = ["ClusterSim", "FTConfig", "SimResult", "PAPER_POOLS",
            "AvailabilityTrace", "generate_trace", "select_scenario",
            "interruption_events_for_window", "Request",
-           "azure_conversation_like", "length_histogram"]
+           "azure_conversation_like", "length_histogram",
+           # discrete-event core
+           "Event", "EventQueue", "Arrive", "Interrupt", "Revive", "Wake",
+           "TransferDone",
+           # network
+           "NetworkLink", "LinkSpec", "Topology", "Transfer",
+           # multi-region spot markets
+           "RegionSpec", "scaled_pools", "generate_multi_region_trace",
+           "correlated_interruption_count",
+           # frontier sweep
+           "FrontierPoint", "sweep_frontier", "pareto_front",
+           "diurnal_rate"]

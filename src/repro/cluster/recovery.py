@@ -121,18 +121,27 @@ def decide(spec: ModelSpec, placement: Placement, ctx: int,
            remaining_grace_s: float, policy: str = "hybrid",
            efficiency: float = 1.0, chunk: int = 0,
            max_len: int = 0, store_has_kv: bool = False,
-           store_bw_bps: float = KV_RESTORE_BW_BPS) -> RecoveryDecision:
+           store_bw_bps: float = KV_RESTORE_BW_BPS,
+           store_wait_s: float = 0.0,
+           transfer_wait_s: float = 0.0) -> RecoveryDecision:
     """policy: 'recompute' (paper default), 'transfer', or 'hybrid'
     (paper §8.1 future work). chunk > 0 prices recompute under the
     engine's chunked-prefill admission (max_len bounds it as the engine
     does). store_has_kv opens the kv_restore branch for the non-recompute
     policies: the tensor store already holds the request's blocks, so
-    restore competes on cost without a grace constraint."""
+    restore competes on cost without a grace constraint.
+
+    store_wait_s / transfer_wait_s: queueing delay the respective link
+    would impose right now (``NetworkLink.queue_wait_s`` — the discrete-
+    event simulator re-derives pricing from link state at decision time).
+    0.0 keeps the closed-form uncontended-limit costs. A contended wire
+    eats into the grace budget too, so ``fits_grace`` is evaluated on the
+    waited transfer time."""
     rc = recompute_seconds(spec, placement, ctx, efficiency, chunk=chunk,
                            max_len=max_len)
-    tr = transfer_seconds(spec, placement, ctx)
-    kv = kv_restore_seconds(spec, ctx, store_bw_bps) if store_has_kv \
-        else float("inf")
+    tr = transfer_seconds(spec, placement, ctx) + max(0.0, transfer_wait_s)
+    kv = (kv_restore_seconds(spec, ctx, store_bw_bps)
+          + max(0.0, store_wait_s)) if store_has_kv else float("inf")
     fits = tr <= remaining_grace_s
     if policy == "recompute":
         mech = "recompute"

@@ -90,6 +90,86 @@ def generate_trace(pools: Dict[str, PoolModel], minutes: int = 8640,
     return AvailabilityTrace(minutes, counts)
 
 
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One region's (or cloud's) spot market: its pool set plus a
+    region-level *capacity crunch* process. A crunch minute reclaims a
+    fraction of EVERY pool in the region simultaneously — the SkyServe
+    observation that preemptions correlate within a region/zone (demand
+    surges hit the whole market, not one instance type), which is the
+    regime where single-region clusters lose all replicas at once and
+    multi-region placement pays off."""
+    name: str
+    pools: Dict[str, PoolModel]
+    crunch_per_min: float = 0.0   # chance a region-wide crunch hits
+    crunch_frac: float = 0.5      # fraction of each pool's avail reclaimed
+
+
+def scaled_pools(scale: int, pools: Optional[Dict[str, PoolModel]] = None
+                 ) -> Dict[str, PoolModel]:
+    """PAPER_POOLS with capacities multiplied by ``scale`` — the knob that
+    takes the paper's 24-GPU market to the 100–1000-node regime."""
+    src = PAPER_POOLS if pools is None else pools
+    return {n: dataclasses.replace(pm, capacity=pm.capacity * scale)
+            for n, pm in src.items()}
+
+
+def generate_multi_region_trace(regions: Sequence[RegionSpec],
+                                minutes: int = 8640,
+                                seed: int = 0) -> AvailabilityTrace:
+    """Joint availability trace over several regions. Pool keys are
+    namespaced ``region/pool`` (the simulator scopes these to pipelines
+    placed in that region). Per-pool dynamics are the same Markov on/off
+    process as ``generate_trace``; on top, each region's crunch process
+    reclaims ``crunch_frac`` of every pool's available capacity in the
+    same minute — correlated interruptions by construction. Regions draw
+    from independent streams, so adding one never perturbs another."""
+    counts: Dict[str, np.ndarray] = {}
+    for ri, reg in enumerate(regions):
+        rng = np.random.RandomState(seed * 7919 + ri)
+        avail = {n: pm.capacity for n, pm in reg.pools.items()}
+        series = {n: np.zeros(minutes, np.int32) for n in reg.pools}
+        for t in range(minutes):
+            crunch = (reg.crunch_per_min > 0
+                      and rng.rand() < reg.crunch_per_min)
+            for name, pm in reg.pools.items():
+                a = avail[name]
+                if crunch and a > 0:
+                    a -= max(1, int(math.ceil(reg.crunch_frac * a)))
+                if a > 0 and rng.rand() < pm.p_loss_per_min * a:
+                    if rng.rand() < pm.correlated:
+                        lost = rng.randint(1, a + 1)
+                    else:
+                        lost = 1
+                    a -= lost
+                missing = pm.capacity - a
+                if missing > 0 and rng.rand() < pm.p_gain_per_min * missing:
+                    a += rng.randint(1, missing + 1)
+                avail[name] = max(0, min(pm.capacity, a))
+                series[name][t] = avail[name]
+        for name in reg.pools:
+            counts[f"{reg.name}/{name}"] = series[name]
+    return AvailabilityTrace(minutes, counts)
+
+
+def correlated_interruption_count(events: Sequence[Tuple[float, str, int]]
+                                  ) -> int:
+    """Instances reclaimed by CORRELATED events: drops where ≥ 2 pools of
+    the same region lose capacity in the same minute (the signature a
+    region crunch leaves in the event stream). Bare (un-namespaced) pool
+    names are skipped — correlation is a region-level notion."""
+    drops: Dict[Tuple[float, str], int] = {}
+    pools_hit: Dict[Tuple[float, str], set] = {}
+    for (t, pool, d) in events:
+        if d >= 0 or "/" not in pool:
+            continue
+        region = pool.rsplit("/", 1)[0]
+        key = (t, region)
+        drops[key] = drops.get(key, 0) - d
+        pools_hit.setdefault(key, set()).add(pool)
+    return sum(c for k, c in drops.items() if len(pools_hit[k]) >= 2)
+
+
 def window_score(trace: AvailabilityTrace, start_min: int, dur_min: int,
                  pools: Optional[Sequence[str]] = None) -> float:
     """Paper §7.2 composite score: event frequency x affected magnitude.

@@ -29,6 +29,16 @@ def _lognormal_with_mean(rng, mean: float, sigma: float, size: int):
     return rng.lognormal(mu, sigma, size)
 
 
+def diurnal_rate(t_s: float, peak_factor: float = 2.0,
+                 period_s: float = 86400.0, phase_s: float = 0.0) -> float:
+    """Smooth day/night multiplier around 1.0: peaks at ``peak_factor``,
+    troughs at ``2 - peak_factor`` (floored at 0.1). Multi-region sweeps
+    phase-shift this per region so load follows the sun."""
+    swing = peak_factor - 1.0
+    x = 1.0 + swing * math.sin(2.0 * math.pi * (t_s - phase_s) / period_s)
+    return max(0.1, x)
+
+
 def azure_conversation_like(duration_s: float = 3600.0,
                             rate_rps: float = 4.67,
                             mean_in: float = 763.0,
@@ -36,9 +46,15 @@ def azure_conversation_like(duration_s: float = 3600.0,
                             max_in: int = 2048,
                             max_out: int = 1024,
                             burstiness: float = 0.6,
-                            seed: int = 0) -> List[Request]:
+                            seed: int = 0,
+                            rate_profile=None) -> List[Request]:
     """Bursty arrivals: piecewise-constant rate modulated by a lognormal
-    AR(1) process (15s segments), Poisson within a segment."""
+    AR(1) process (15s segments), Poisson within a segment.
+
+    rate_profile: optional ``f(t_s) -> multiplier`` composed on top of the
+    AR(1) burstiness (e.g. ``diurnal_rate``) — deterministic macro trend
+    over stochastic micro bursts. None keeps the trace bit-identical to
+    the pre-profile generator."""
     rng = np.random.RandomState(seed)
     seg = 15.0
     n_seg = int(math.ceil(duration_s / seg))
@@ -52,6 +68,8 @@ def azure_conversation_like(duration_s: float = 3600.0,
     rid = 0
     for i in range(n_seg):
         lam = rate_rps * mod[i] * seg
+        if rate_profile is not None:
+            lam *= rate_profile((i + 0.5) * seg)
         n = rng.poisson(lam)
         times = np.sort(rng.uniform(i * seg, min((i + 1) * seg, duration_s),
                                     n))

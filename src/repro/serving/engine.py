@@ -171,10 +171,12 @@ class Engine:
                  kv_alloc: str = "lazy", kv_overcommit: float = 1.0,
                  admit_window: int = 4, prefix_share: bool = False,
                  grow_ahead: int = 1, admit_headroom: bool = True,
-                 kv_sanitize: Optional[bool] = None):
+                 kv_sanitize: Optional[bool] = None,
+                 victim_policy: str = "cost", placement: Any = None):
         assert admission in ("bucketed", "legacy"), admission
         assert kv_layout in ("auto", "paged", "contig"), kv_layout
         assert kv_alloc in ("lazy", "upfront"), kv_alloc
+        assert victim_policy in ("cost", "fewest"), victim_policy
         _silence_cpu_donation_warnings()
         self.cfg = cfg
         self.params = params
@@ -209,6 +211,16 @@ class Engine:
         self._admit_window = max(0, int(admit_window))
         self._grow_ahead = max(1, int(grow_ahead))
         self._admit_headroom = bool(admit_headroom)
+        # preemption-victim choice: "cost" picks the slot with the lowest
+        # estimated re-admission cost (restore vs recompute, priced by
+        # cluster/recovery); "fewest" is the legacy fewest-generated rule,
+        # which remains the tie-break within a cost bucket. ``placement``
+        # (core.estimator.Placement) prices the recompute branch; without
+        # it only the restore (store round-trip) branch is priced.
+        self._victim_policy = victim_policy
+        self._placement = placement
+        self._victim_costs: Dict[int, float] = {}
+        self._victim_spec = None
         self.bm: Optional[BlockManager] = None
         self._prefix = None
         self._tbl_dirty = False
@@ -895,14 +907,46 @@ class Engine:
             self._install(m.req, m.slot, first[j])
 
     # -- decode-time grow / preemption ------------------------------------------
+    def _victim_cost(self, slot: int) -> float:
+        """Estimated re-admission cost of preempting this slot: the
+        cheaper of the store restore round trip
+        (``recovery.preemption_seconds``) and a context recompute
+        (``recovery.recompute_seconds``, when a placement prices it) —
+        the same estimates the cluster simulator charges. Context is
+        bucketed to the block grid before pricing: two slots whose KV
+        occupies the same number of blocks cost the same to re-admit, so
+        the fewest-generated rule stays the live tie-break instead of
+        being drowned by sub-block context noise."""
+        r = self.slots[slot]
+        bs = self.bm.block_size if self.bm is not None else 16
+        ctx_b = max(bs, -(-r.ctx_len // bs) * bs)
+        c = self._victim_costs.get(ctx_b)
+        if c is None:
+            from repro.cluster.recovery import (preemption_seconds,
+                                                recompute_seconds)
+            if self._victim_spec is None:
+                self._victim_spec = self.cfg.to_modelspec()
+            c = preemption_seconds(self._victim_spec, ctx_b)
+            if self._placement is not None:
+                c = min(c, recompute_seconds(
+                    self._victim_spec, self._placement, ctx_b,
+                    chunk=self.prefill_chunk, max_len=self.max_len))
+            self._victim_costs[ctx_b] = c
+        return c
+
     def _pick_victim(self, candidates: List[int]) -> Optional[int]:
-        """Preemption victim: the live slot with the fewest generated
-        tokens (least progress to park; its whole KV round-trips through
-        the store anyway). Deterministic tie-break on slot index."""
+        """Preemption victim. Policy "cost": the slot whose re-admission
+        is estimated cheapest (``_victim_cost``); fewest generated tokens
+        breaks cost ties (least progress to park), slot index breaks the
+        rest. Policy "fewest": the legacy fewest-generated-only rule."""
         owned = [i for i in candidates if self.slots[i] is not None]
         if not owned:
             return None
-        return min(owned, key=lambda i: (len(self.slots[i].generated), i))
+        if self._victim_policy == "fewest":
+            return min(owned, key=lambda i: (len(self.slots[i].generated),
+                                             i))
+        return min(owned, key=lambda i: (self._victim_cost(i),
+                                         len(self.slots[i].generated), i))
 
     def _preempt(self, slot: int) -> None:
         """Evict a live slot to make room: export its KV (position-exact,

@@ -84,6 +84,7 @@ class ServingPipeline:
     placement: Optional[Any] = None       # core.estimator.Placement
     round_s: float = DEFAULT_ROUND_S      # est. decode-step wall time
     bucket_tbl: Optional[Any] = None      # core.buckets.BucketTable
+    pricing: str = "spot"                 # "spot" | "ondemand" billing rate
 
 
 class GlobalServer:
@@ -189,7 +190,13 @@ class GlobalServer:
     def add_pipeline(self, params: Any, instance_ids: Sequence[str],
                      weight: Optional[float] = None, partition: str = "full",
                      placement=None,
-                     engine_kw: Optional[Dict] = None) -> ServingPipeline:
+                     engine_kw: Optional[Dict] = None,
+                     pricing: str = "spot") -> ServingPipeline:
+        """pricing: which rate this pipeline is billed at — a cluster
+        mixing spot and on-demand capacity prices the SAME placement
+        differently, so cost-policy dispatch must re-rank per pipeline
+        (``BucketTable.weight(spot=...)``), not per spec."""
+        assert pricing in ("spot", "ondemand"), pricing
         if self.store is not None:
             key = f"{partition}/p{len(self.pipelines)}"
             params, cold = self.store.put_or_attach(self.cfg.name, key,
@@ -207,13 +214,17 @@ class GlobalServer:
                 bucket_tbl = self._bucket_table(placement)
         pid = len(self.pipelines)
         self._pipe_engine_kw[pid] = dict(engine_kw or {})
+        # the engine's cost-aware preemption-victim policy prices the
+        # recompute branch off the pipeline's placement when known
+        if placement is not None:
+            self._pipe_engine_kw[pid].setdefault("placement", placement)
         p = ServingPipeline(pid,
                             self._build_engine(params,
                                                self._pipe_engine_kw[pid]),
                             list(instance_ids),
                             1.0 if weight is None else weight,
                             placement=placement, round_s=round_s,
-                            bucket_tbl=bucket_tbl)
+                            bucket_tbl=bucket_tbl, pricing=pricing)
         self.pipelines.append(p)
         self._rr_credit[p.pid] = 0.0
         # a newly-placed pipeline warms its cache from published hot
@@ -239,7 +250,11 @@ class GlobalServer:
             return 1.0
         if b is None or p.bucket_tbl is None:
             return p.weight
-        return p.bucket_tbl.weight(b[0], b[1], policy=self.dispatch)
+        # cost-policy weights divide by the pipeline's OWN billing rate:
+        # an on-demand pipeline serving the same bucket at the same
+        # tokens/s is strictly more $/token, so spot capacity out-ranks it
+        return p.bucket_tbl.weight(b[0], b[1], policy=self.dispatch,
+                                   spot=(p.pricing == "spot"))
 
     def _prefix_holders(self, prompt: Sequence[int]) -> set:
         """Pids of pipelines holding a published/warmed shared-prefix run

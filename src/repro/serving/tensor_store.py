@@ -24,15 +24,120 @@ Accounting invariant (regression-tested): every resident key has exactly
 one entry in each of the params/refcount/bytes/LRU maps, whichever path
 inserted it (``put``, ``put_or_attach`` or ``load``), so
 ``resident_bytes``/``refcount`` can never drift between paths.
+
+SANITIZER MODE (``TensorStore(sanitize=True)`` or ``REPRO_KV_SANITIZE=1``,
+same switch as the BlockManager shadow ledger): a shadow ledger mirrors
+every publish/evict/pin/refcount transition through the store's own
+notification points and cross-checks the real maps after every operation.
+It turns silent misuse into typed errors at the offending call:
+
+- ``DoubleEvictError``    — a key dropped that the ledger says is not
+                            resident (evicted twice, or never published)
+- ``PinnedEvictError``    — a key dropped while the ledger holds
+                            references on it (an engine still attached)
+- ``RefcountUnderflowError`` — ``detach`` on a key with no outstanding
+                            reference (unbalanced attach/detach)
+- ``StoreSanitizerError`` — shadow/real divergence: some path mutated
+                            store state without going through the single
+                            bookkeeping path
+
+The tolerant production behavior (``detach`` no-ops on underflow, ``take``
+returns None) is unchanged when disarmed.
+
+BANDWIDTH HOOK: ``on_transfer(kind, nbytes)`` fires on every byte-moving
+operation ("put" inserts, "take" consumes, "load" cold loads) so a host —
+e.g. the discrete-event cluster simulator's ``NetworkLink`` — can account
+store traffic on a contended link instead of assuming it free.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 Key = Tuple[str, str]
+
+
+class StoreSanitizerError(RuntimeError):
+    """A TensorStore accounting invariant was violated (sanitize mode)."""
+
+
+class DoubleEvictError(StoreSanitizerError):
+    """A key was dropped that the shadow ledger has no record of."""
+
+
+class PinnedEvictError(StoreSanitizerError):
+    """A key was dropped while references were still outstanding."""
+
+
+class RefcountUnderflowError(StoreSanitizerError):
+    """``detach`` on a key with no outstanding reference."""
+
+
+def _env_sanitize() -> bool:
+    return os.environ.get("REPRO_KV_SANITIZE", "0").lower() not in (
+        "", "0", "false", "off")
+
+
+class _StoreShadow:
+    """Independent mirror of the store's residency/refcount state.
+
+    Maintained through explicit transition notifications (never by reading
+    the store's maps), so a store-side bookkeeping bug shows up as a
+    divergence instead of being silently mirrored."""
+
+    def __init__(self) -> None:
+        self.entries: Dict[Key, list] = {}    # key -> [refcount, nbytes]
+
+    def on_register(self, key: Key, nbytes: int) -> None:
+        e = self.entries.get(key)
+        if e is None:
+            self.entries[key] = [0, nbytes]
+        else:
+            e[1] = nbytes          # re-publish over a resident key
+
+    def on_acquire(self, key: Key) -> None:
+        if key not in self.entries:
+            raise DoubleEvictError(
+                f"attach of non-resident key {key} (evicted or never put)")
+        self.entries[key][0] += 1
+
+    def on_detach(self, key: Key) -> None:
+        e = self.entries.get(key)
+        if e is None or e[0] <= 0:
+            raise RefcountUnderflowError(
+                f"detach of key {key} with no outstanding reference")
+        e[0] -= 1
+
+    def on_drop(self, key: Key) -> None:
+        e = self.entries.get(key)
+        if e is None:
+            raise DoubleEvictError(f"evict of non-resident key {key} "
+                                   "(double evict)")
+        if e[0] > 0:
+            raise PinnedEvictError(
+                f"evict of key {key} with refcount {e[0]} "
+                "(engines still attached)")
+        del self.entries[key]
+
+    def crosscheck(self, store: "TensorStore", op: str) -> None:
+        real_keys = set(store._store)
+        if real_keys != set(self.entries):
+            raise StoreSanitizerError(
+                f"after {op}: resident keys diverged "
+                f"(store-only={real_keys - set(self.entries)}, "
+                f"shadow-only={set(self.entries) - real_keys})")
+        for k, (rc, nb) in self.entries.items():
+            if store._refcount.get(k, 0) != rc:
+                raise StoreSanitizerError(
+                    f"after {op}: refcount of {k} diverged "
+                    f"(store={store._refcount.get(k, 0)}, shadow={rc})")
+            if store._bytes.get(k, -1) != nb:
+                raise StoreSanitizerError(
+                    f"after {op}: bytes of {k} diverged "
+                    f"(store={store._bytes.get(k, -1)}, shadow={nb})")
 
 
 @dataclasses.dataclass
@@ -45,7 +150,9 @@ class LoadRecord:
 class TensorStore:
     def __init__(self, load_time_model: Optional[Callable[[int], float]] = None,
                  budget_bytes: Optional[int] = None,
-                 pin_hot_k: int = 0):
+                 pin_hot_k: int = 0,
+                 sanitize: Optional[bool] = None,
+                 on_transfer: Optional[Callable[[str, int], None]] = None):
         """load_time_model: bytes -> seconds, used by the virtual clock to
         model remote-storage fetch (paper: custom raw-binary shards so each
         node downloads only its partition). budget_bytes: soft cap enforced
@@ -56,7 +163,9 @@ class TensorStore:
         published prefix is read (``peek``/``attach``) far more often than
         it is inserted, so pure recency would evict exactly the payload
         every pipeline warms from (``evict_unreferenced`` still reclaims
-        everything)."""
+        everything). sanitize: arm the shadow ledger (None = follow
+        REPRO_KV_SANITIZE). on_transfer: ``f(kind, nbytes)`` byte-movement
+        hook ("put" inserts, "take" consumes) for link accounting."""
         self._store: Dict[Key, Any] = {}
         self._refcount: Dict[Key, int] = {}
         self._bytes: Dict[Key, int] = {}
@@ -67,8 +176,15 @@ class TensorStore:
         self.load_time_model = load_time_model or (lambda nbytes: 0.0)
         self.budget_bytes = budget_bytes
         self.pin_hot_k = pin_hot_k
+        self.sanitize = _env_sanitize() if sanitize is None else sanitize
+        self._shadow = _StoreShadow() if self.sanitize else None
+        self.on_transfer = on_transfer
 
     # -- internal bookkeeping (single path for every insert/acquire) ------------
+    def _check(self, op: str) -> None:
+        if self._shadow is not None:
+            self._shadow.crosscheck(self, op)
+
     def _touch(self, key: Key) -> None:
         self._clock += 1
         self._last_used[key] = self._clock
@@ -78,6 +194,10 @@ class TensorStore:
         self._bytes[key] = _tree_bytes(params)
         self._refcount.setdefault(key, 0)
         self._touch(key)
+        if self._shadow is not None:
+            self._shadow.on_register(key, self._bytes[key])
+        if self.on_transfer is not None:
+            self.on_transfer("put", self._bytes[key])
         if self.budget_bytes is not None:
             self.evict_to(self.budget_bytes)
 
@@ -85,6 +205,8 @@ class TensorStore:
         self._hits[key] = self._hits.get(key, 0) + 1
 
     def _acquire(self, key: Key) -> Any:
+        if self._shadow is not None:
+            self._shadow.on_acquire(key)
         self._refcount[key] += 1
         self._hit(key)
         self._touch(key)
@@ -95,13 +217,16 @@ class TensorStore:
         """Publish without acquiring: the key is resident at refcount 0
         (evictable) until someone attaches."""
         self._register((model, partition), params)
+        self._check("put")
 
     def contains(self, model: str, partition: str) -> bool:
         return (model, partition) in self._store
 
     def attach(self, model: str, partition: str) -> Any:
         """Zero-copy: returns the stored arrays themselves."""
-        return self._acquire((model, partition))
+        out = self._acquire((model, partition))
+        self._check("attach")
+        return out
 
     def put_or_attach(self, model: str, partition: str,
                       params: Any) -> Tuple[Any, bool]:
@@ -112,7 +237,9 @@ class TensorStore:
         cold = key not in self._store
         if cold:
             self._register(key, params)
-        return self._acquire(key), cold
+        out = self._acquire(key), cold
+        self._check("put_or_attach")
+        return out
 
     def peek(self, model: str, partition: str) -> Optional[Any]:
         """Non-consuming read: return the resident params (or None) WITHOUT
@@ -143,7 +270,11 @@ class TensorStore:
         if key not in self._store or self._refcount.get(key, 0) > 0:
             return None
         params = self._store[key]
+        nbytes = self._bytes.get(key, 0)
         self._drop(key)
+        if self.on_transfer is not None:
+            self.on_transfer("take", nbytes)
+        self._check("take")
         return params
 
     def resident_bytes(self) -> int:
@@ -152,8 +283,11 @@ class TensorStore:
 
     def detach(self, model: str, partition: str) -> None:
         key = (model, partition)
+        if self._shadow is not None:
+            self._shadow.on_detach(key)     # raises on underflow
         if key in self._refcount and self._refcount[key] > 0:
             self._refcount[key] -= 1
+        self._check("detach")
 
     def refcount(self, model: str, partition: str) -> int:
         return self._refcount.get((model, partition), 0)
@@ -173,6 +307,8 @@ class TensorStore:
         return ranked[:self.pin_hot_k]
 
     def _drop(self, key: Key) -> None:
+        if self._shadow is not None:
+            self._shadow.on_drop(key)       # raises on double/pinned evict
         self._store.pop(key, None)
         self._refcount.pop(key, None)
         self._bytes.pop(key, None)
@@ -184,6 +320,7 @@ class TensorStore:
         dead = [k for k, c in self._refcount.items() if c == 0]
         for k in dead:
             self._drop(k)
+        self._check("evict_unreferenced")
         return len(dead)
 
     def evict_to(self, budget_bytes: int) -> int:
@@ -204,6 +341,7 @@ class TensorStore:
             freed += self._bytes[k]
             resident -= self._bytes[k]
             self._drop(k)
+        self._check("evict_to")
         return freed
 
     def load(self, model: str, partition: str,
@@ -212,14 +350,18 @@ class TensorStore:
         key = (model, partition)
         if key in self._store:
             self.loads.append(LoadRecord(key, 0.0, cold=False))
-            return self._acquire(key), 0.0
+            out = self._acquire(key), 0.0
+            self._check("load")
+            return out
         t0 = time.perf_counter()
         params = loader()
         virtual = self.load_time_model(_tree_bytes(params))
         self._register(key, params)
         self.loads.append(LoadRecord(key, time.perf_counter() - t0,
                                      cold=True))
-        return self._acquire(key), virtual
+        out = self._acquire(key), virtual
+        self._check("load")
+        return out
 
     def check_consistent(self) -> bool:
         """The accounting invariant: all four maps key-identical."""

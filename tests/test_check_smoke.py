@@ -22,6 +22,8 @@ prefix_share/capacity,0.0,noshare=14 share=24 ratio=1.71x
 prefix_share/identity,0.0,identical=1 reduction=0.450
 routing/cost,0.0,ratio=0.400 identical=1
 kernels/chunk_dispatch,0.0,direct=9 scatter=2 reduction=1.22x identical=1
+cluster_sim/contention,0.0,ratio=1.429x base_s=140.0 des_s=200.0 wait_s=60.0
+cluster_sim/frontier,0.0,points=12 front=8 saving=1.238x
 """
 
 

@@ -1,0 +1,375 @@
+"""Discrete-event cluster simulator: typed event core, contended network
+links, closed-form parity in the uncontended limit, link contention,
+multi-region spot pools with correlated preemptions, per-pipeline spot/OD
+mix, and the cost-vs-SLO frontier sweep."""
+
+import dataclasses
+
+import pytest
+
+from repro.cluster import (ClusterSim, FTConfig, RegionSpec, Topology,
+                           azure_conversation_like,
+                           correlated_interruption_count, diurnal_rate,
+                           generate_multi_region_trace, pareto_front,
+                           scaled_pools, sweep_frontier)
+from repro.cluster.events import (Arrive, EventQueue, Interrupt, Wake,
+                                  dispatch)
+from repro.cluster.network import LinkSpec, NetworkLink
+from repro.cluster.spot_trace import PAPER_POOLS
+from repro.configs import get_config
+from repro.core import Placement, Stage, populate_cluster
+from repro.core.modelspec import uniform_decoder
+from repro.hw import AWS_INSTANCES, effective, paper_cluster
+from repro.hw.profiles import DeviceProfile, InstanceProfile
+
+# -- tiny analytical fixtures (pure estimator math, no JAX compute) ----------
+
+TINY = uniform_decoder("des-4l", 4, 2048, 16, 16, 8192, 32000)
+
+
+def _inst(name: str, mem_gb: float = 24.0, tflops: float = 100.0,
+          price: float = 2.0) -> InstanceProfile:
+    dev = DeviceProfile(f"{name}-dev", mem_gb, tflops * 1e12, 800e9,
+                        5e-6, 32e9)
+    return InstanceProfile(name, dev, 1, 5e-5, 25e9 / 8,
+                           price, price * 0.35, name)
+
+
+def _single(spec, inst) -> Placement:
+    return Placement(
+        spec, (Stage(inst, 1, spec.n_layers, first=True, last=True),))
+
+
+NODE = _inst("des-node")
+PL = _single(TINY, NODE)
+
+
+# -- event core ---------------------------------------------------------------
+
+def test_event_queue_orders_by_time_then_fifo():
+    q = EventQueue()
+    a, b, c = Wake(0), Wake(1), Wake(2)
+    q.push(2.0, a)
+    q.push(1.0, b)
+    q.push(1.0, c)          # same time as b: FIFO tie-break
+    assert len(q) == 3 and q.peek_time() == 1.0
+    assert q.pop() == (1.0, b)
+    assert q.pop() == (1.0, c)
+    assert q.pop() == (2.0, a)
+    assert not q
+
+
+def test_dispatch_routes_by_type_and_respects_until():
+    q = EventQueue()
+    seen = []
+    q.push(1.0, Arrive("r"))
+    q.push(2.0, Interrupt("pool", 2))
+    q.push(50.0, Wake(7))           # beyond the horizon: never handled
+    handlers = {
+        Arrive: lambda t, e: seen.append(("arrive", t, e.req)),
+        Interrupt: lambda t, e: seen.append(("int", t, e.pool, e.count)),
+        Wake: lambda t, e: seen.append(("wake", t)),
+    }
+    t_last = dispatch(q, handlers, until=10.0)
+    assert seen == [("arrive", 1.0, "r"), ("int", 2.0, "pool", 2)]
+    assert t_last == 2.0
+
+
+def test_dispatch_raises_on_missing_handler():
+    q = EventQueue()
+    q.push(0.0, Wake(0))
+    with pytest.raises(KeyError):
+        dispatch(q, {})
+
+
+# -- network links ------------------------------------------------------------
+
+def test_link_serializes_and_accounts_wait():
+    ln = NetworkLink("l", bw_bps=100.0, latency_s=1.0)
+    t1 = ln.submit(0.0, "a", 200.0)       # 1 + 2 = 3s
+    t2 = ln.submit(0.0, "b", 100.0)       # queued behind t1
+    assert (t1.start_s, t1.end_s) == (0.0, 3.0)
+    assert (t2.start_s, t2.end_s) == (3.0, 5.0)
+    assert t2.wait_s == 3.0
+    assert ln.busy_until == 5.0 and ln.queue_wait_s(1.0) == 4.0
+    assert ln.n_transfers == 2 and ln.total_bytes == 300.0
+    assert ln.wait_s == 3.0
+    # idle gap: a late submit starts immediately
+    t3 = ln.submit(10.0, "a", 100.0)
+    assert t3.start_s == 10.0 and t3.wait_s == 0.0
+    assert ln.by_kind == {"a": 2, "b": 1}
+
+
+def test_bytes_for_duration_inverts_service_curve():
+    ln = NetworkLink("l", bw_bps=3.125e9, latency_s=0.05)
+    for d in (0.5, 61.85, 120.0):
+        assert ln.duration_s(ln.bytes_for_duration(d)) == pytest.approx(
+            d, abs=1e-12)
+    assert ln.bytes_for_duration(0.01) == 0.0     # below latency floor
+
+
+def test_topology_links_are_shared_per_region():
+    topo = Topology({"us": LinkSpec(1e9, 0.1)})
+    assert topo.store_link("us") is topo.store_link("us")
+    assert topo.store_link("us").bw_bps == 1e9
+    assert topo.store_link("eu") is not topo.store_link("us")
+    assert topo.cross_link("us", "eu") is topo.cross_link("eu", "us")
+    assert len(topo.links()) == 3
+    topo.store_link("us").submit(0.0, "warmup", 1e9)
+    assert topo.stats()["store:us"]["n"] == 1
+
+
+# -- closed-form parity (uncontended limit) -----------------------------------
+
+@pytest.fixture(scope="module")
+def cluster():
+    cfg = get_config("qwen3-32b")
+    spec = cfg.to_modelspec()
+    insts = {n: dataclasses.replace(i, device=effective(i.device))
+             for n, i in AWS_INSTANCES.items()}
+    plan = populate_cluster(spec, paper_cluster(), insts, 763, 232, beam_k=1)
+    assert len(plan.pipelines) >= 2
+    return spec, plan
+
+
+PARITY_FTS = {
+    "no_events": (FTConfig(), False),
+    "shunt": (FTConfig(), True),
+    "no_migration": (FTConfig(request_migration=False), True),
+    "no_ci": (FTConfig(concurrent_init=False), True),
+    "nohandle": (FTConfig(request_migration=False,
+                          concurrent_init=False), True),
+    "hybrid_kv": (FTConfig(recovery_policy="hybrid",
+                           kv_store_migration=True), True),
+    "transfer": (FTConfig(recovery_policy="transfer"), True),
+    "kv_pool": (FTConfig(kv_pool_tokens=30_000), True),
+    "short_grace": (FTConfig(grace_period_s=30.0), True),
+    "prefix_warm": (FTConfig(prefix_warm_bytes=1e9), True),
+}
+
+
+@pytest.mark.parametrize("name", sorted(PARITY_FTS))
+def test_des_matches_closed_form_uncontended(cluster, name):
+    """With an idle topology the DES timeline must reproduce the legacy
+    closed-form metrics to float precision on every scenario shape the
+    old simulator tests cover — transfers are calibrated so an
+    uncontended link IS the constant the closed form charges."""
+    spec, plan = cluster
+    ft, with_events = PARITY_FTS[name]
+    pool = plan.pipelines[0].stages[0].instance.name
+    events = [(120.0, pool, -1), (300.0, pool, -1)] if with_events else ()
+    reqs = azure_conversation_like(duration_s=600.0, rate_rps=3.0, seed=3)
+    base = ClusterSim(spec, plan.pipelines, ft).run(
+        reqs, 600.0, events=events)
+    des = ClusterSim(spec, plan.pipelines, ft, network=Topology()).run(
+        reqs, 600.0, events=events)
+    assert des.rps == pytest.approx(base.rps, abs=1e-6)
+    assert des.total_downtime_s == pytest.approx(base.total_downtime_s,
+                                                 abs=1e-6)
+    assert des.cost_usd == pytest.approx(base.cost_usd, abs=1e-6)
+    assert len(des.completed) == len(base.completed)
+    assert des.interruptions == base.interruptions
+    assert des.kv_preemptions == base.kv_preemptions
+    for kind in ("ttft", "tpot", "e2e"):
+        if base.latencies(kind):
+            assert des.mean(kind) == pytest.approx(base.mean(kind),
+                                                   abs=1e-6)
+    if with_events:
+        assert des.interruptions > 0
+        assert des.transfers > 0          # warm-ups actually rode the link
+
+
+# -- link contention ----------------------------------------------------------
+
+def _contention_ft():
+    return FTConfig(grace_period_s=30.0, node_provision_s=40.0,
+                    store_load_s=60.0, engine_init_s=30.0)
+
+
+def test_simultaneous_warmups_contend_on_store_link():
+    """Two pipelines reclaimed in the same region at the same instant:
+    the closed form prices both warm-ups at store_load_s, but on one
+    store link they serialize — the second replacement revives later and
+    total downtime grows measurably (the §5 effect the refactor adds)."""
+    ft = _contention_ft()
+    reqs = azure_conversation_like(duration_s=400.0, rate_rps=0.5, seed=0)
+    events = [(100.0, NODE.name, -2)]
+    base = ClusterSim(TINY, [PL, PL], ft).run(reqs, 400.0, events=events)
+    des = ClusterSim(TINY, [PL, PL], ft, network=Topology()).run(
+        reqs, 400.0, events=events)
+    assert base.interruptions == des.interruptions == 2
+    ratio = des.total_downtime_s / base.total_downtime_s
+    assert ratio >= 1.1, f"contention ratio {ratio:.3f}"
+    # the queued warm-up is charged its real wait on the shared link
+    assert des.link_stats["store:local"]["wait_s"] > 0.0
+    # closed form: 2 x (provision + store_load - grace) = 140s; DES: the
+    # second warm-up starts when the first finishes -> +60s exactly
+    assert base.total_downtime_s == pytest.approx(140.0, abs=1e-6)
+    assert des.total_downtime_s == pytest.approx(200.0, abs=1e-6)
+
+
+def test_single_warmup_uncontended_no_penalty():
+    """One interruption on the same topology: nothing contends, DES ==
+    closed form (the contention test's control arm)."""
+    ft = _contention_ft()
+    reqs = azure_conversation_like(duration_s=400.0, rate_rps=0.5, seed=0)
+    events = [(100.0, NODE.name, -1)]
+    base = ClusterSim(TINY, [PL, PL], ft).run(reqs, 400.0, events=events)
+    des = ClusterSim(TINY, [PL, PL], ft, network=Topology()).run(
+        reqs, 400.0, events=events)
+    assert des.total_downtime_s == pytest.approx(base.total_downtime_s,
+                                                 abs=1e-6)
+
+
+# -- multi-region pools + correlated preemptions ------------------------------
+
+def _regions(crunch=0.02):
+    pools = {"des-node": dataclasses.replace(
+        PAPER_POOLS["g6.12xlarge"], name="des-node", capacity=20)}
+    return [RegionSpec("us", pools, crunch_per_min=crunch),
+            RegionSpec("eu", pools, crunch_per_min=crunch)]
+
+
+def test_multi_region_trace_namespaced_and_deterministic():
+    regs = _regions()
+    tr1 = generate_multi_region_trace(regs, minutes=300, seed=5)
+    tr2 = generate_multi_region_trace(regs, minutes=300, seed=5)
+    assert set(tr1.counts) == {"us/des-node", "eu/des-node"}
+    for k in tr1.counts:
+        assert (tr1.counts[k] == tr2.counts[k]).all()
+        assert tr1.counts[k].min() >= 0
+        assert tr1.counts[k].max() <= 20
+    # adding a region never perturbs existing ones (independent streams)
+    tr3 = generate_multi_region_trace(regs + [RegionSpec("ap",
+                                                         regs[0].pools)],
+                                      minutes=300, seed=5)
+    assert (tr3.counts["us/des-node"] == tr1.counts["us/des-node"]).all()
+
+
+def test_region_crunch_produces_correlated_interruptions():
+    pools = {n: dataclasses.replace(pm, capacity=pm.capacity * 8)
+             for n, pm in scaled_pools(1).items()}
+    regs = [RegionSpec("us", pools, crunch_per_min=0.05),
+            RegionSpec("eu", pools, crunch_per_min=0.05)]
+    tr = generate_multi_region_trace(regs, minutes=400, seed=2)
+    ev = tr.events()
+    n_corr = correlated_interruption_count(ev)
+    assert n_corr >= 50
+    # no-crunch control: far fewer simultaneous multi-pool drops
+    calm = generate_multi_region_trace(
+        [RegionSpec(r.name, r.pools) for r in regs], minutes=400, seed=2)
+    assert correlated_interruption_count(calm.events()) < n_corr
+
+
+def test_region_scoped_events_hit_only_that_region():
+    ft = _contention_ft()
+    reqs = azure_conversation_like(duration_s=300.0, rate_rps=0.5, seed=1)
+    sim = ClusterSim(TINY, [PL, PL], ft, network=Topology(),
+                     regions=["us", "eu"])
+    res = sim.run(reqs, 300.0, events=[(100.0, "us/des-node", -2)])
+    assert res.interruptions == 1           # only the us pipeline matches
+    assert list(res.downtime_s) == [0]
+    # bare pool names keep matching any region (legacy traces)
+    sim2 = ClusterSim(TINY, [PL, PL], ft, network=Topology(),
+                      regions=["us", "eu"])
+    res2 = sim2.run(reqs, 300.0, events=[(100.0, "des-node", -2)])
+    assert res2.interruptions == 2
+
+
+def test_cross_region_restore_rides_cross_link():
+    """A hybrid-recovery interruption in "us" whose migrated requests
+    land on the "eu" pipeline restores KV across regions: the cross link
+    carries real bytes. (transfer policy pins the mechanism, and a
+    bandwidth-starved device keeps requests mid-decode at the event.)"""
+    slow_dev = DeviceProfile("des-slow-dev", 24.0, 1e12, 0.8e9, 5e-6, 32e9)
+    slow = InstanceProfile("des-slow", slow_dev, 1, 5e-5, 25e9 / 8,
+                           2.0, 0.7, "des-slow")
+    pl = _single(TINY, slow)
+    ft = dataclasses.replace(_contention_ft(), recovery_policy="transfer")
+    reqs = azure_conversation_like(duration_s=300.0, rate_rps=2.0, seed=1)
+    sim = ClusterSim(TINY, [pl, pl], ft, network=Topology(),
+                     regions=["us", "eu"])
+    res = sim.run(reqs, 300.0, events=[(100.0, "us/des-slow", -1)])
+    assert res.interruptions == 1
+    xr = res.link_stats.get("xr:eu<->us")
+    assert xr is not None and xr["bytes"] > 0
+    assert any(tr.kind == "kv_restore" for tr in sim.transfer_log)
+
+
+def test_ondemand_pipelines_immune_and_priced_up():
+    ft = _contention_ft()
+    reqs = azure_conversation_like(duration_s=300.0, rate_rps=0.5, seed=1)
+    mixed = ClusterSim(TINY, [PL, PL], ft, spot=[True, False])
+    res_mixed = mixed.run(reqs, 300.0, events=[(50.0, NODE.name, -2)])
+    assert res_mixed.interruptions == 1     # OD pipeline never reclaimed
+    all_spot = ClusterSim(TINY, [PL, PL], ft)
+    res_spot = all_spot.run(reqs, 300.0)
+    assert res_mixed.cost_usd > res_spot.cost_usd   # OD premium on base
+
+
+# -- shared estimator caches at scale ----------------------------------------
+
+def test_replicated_placement_shares_estimator_caches():
+    ft = FTConfig()
+    sim = ClusterSim(TINY, [PL] * 64, ft)
+    p0 = sim.pipes[0]
+    assert all(p._iter_cache is p0._iter_cache for p in sim.pipes)
+    assert all(p.weight == p0.weight and p.b_max == p0.b_max
+               for p in sim.pipes)
+    p0.t_iter(1)
+    assert 1 in sim.pipes[63]._iter_cache   # one estimate serves all
+
+
+# -- frontier sweep -----------------------------------------------------------
+
+def test_frontier_sweep_grid_and_pareto():
+    reqs = azure_conversation_like(duration_s=300.0, rate_rps=1.0, seed=4)
+    events = [(60.0, NODE.name, -1), (150.0, NODE.name, -1)]
+    seen = []
+    pts = sweep_frontier(
+        TINY, [PL, PL], reqs, 300.0, events=events,
+        spot_fracs=(0.0, 1.0), graces=(30.0, 120.0),
+        policies=("recompute", "hybrid"),
+        network_factory=Topology, on_point=seen.append)
+    assert len(pts) == 8 and seen == pts
+    by = {(p.spot_frac, p.grace_s, p.policy): p for p in pts}
+    # all-on-demand: no interruptions, higher cost than all-spot
+    assert by[(0.0, 30.0, "recompute")].interruptions == 0
+    assert (by[(0.0, 30.0, "recompute")].cost_usd
+            > by[(1.0, 30.0, "recompute")].cost_usd)
+    # spot cells actually took the hits
+    assert by[(1.0, 120.0, "recompute")].interruptions == 2
+    front = pareto_front(pts)
+    assert front and set(front) <= set(pts)
+    for f in front:
+        assert not any(q.dominates(f) for q in pts)
+    # every dominated point is excluded
+    for p in pts:
+        if any(q.dominates(p) for q in pts):
+            assert p not in front
+
+
+def test_diurnal_rate_profile_shapes_arrivals():
+    assert diurnal_rate(0.0) == pytest.approx(1.0)
+    assert diurnal_rate(21600.0) == pytest.approx(2.0)      # quarter period
+    assert diurnal_rate(64800.0) == pytest.approx(0.1)      # trough floored
+    flat = azure_conversation_like(duration_s=3600.0, rate_rps=4.0, seed=9)
+    peak = azure_conversation_like(duration_s=3600.0, rate_rps=4.0, seed=9,
+                                   rate_profile=lambda t: 2.0)
+    assert len(peak) > len(flat) * 1.5
+
+
+# -- 1000-node churn smoke (bench enforces the wall-clock budget) -------------
+
+def test_thousand_node_churn_completes():
+    ft = FTConfig()
+    n = 1000
+    regions = ["us" if i % 2 == 0 else "eu" for i in range(n)]
+    sim = ClusterSim(TINY, [PL] * n, ft, network=Topology(),
+                     regions=regions)
+    reqs = azure_conversation_like(duration_s=120.0, rate_rps=20.0, seed=6)
+    events = [(30.0 + i, ("us" if i % 2 else "eu") + "/des-node", -1)
+              for i in range(60)]
+    res = sim.run(reqs, 120.0, events=events)
+    assert res.interruptions == 60
+    assert len(res.completed) > 0

@@ -154,9 +154,13 @@ def test_preemption_roundtrip_byte_identical_standalone(setup):
 
 
 def test_preemption_victim_has_fewest_generated(setup):
+    """Legacy fewest-generated rule (victim_policy="fewest") pinned: the
+    default cost-aware policy would pick the OLD request here (smaller
+    context = cheaper restore), which tests/test_cluster_des.py covers."""
     cfg, params = setup
     eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
-                 n_blocks=8, kv_overcommit=2.0)      # 7 physical blocks
+                 n_blocks=8, kv_overcommit=2.0,      # 7 physical blocks
+                 victim_policy="fewest")
     old = ServeRequest(prompt=list(range(1, 9)), max_new_tokens=30)
     eng.admit(old)
     for _ in range(6):
@@ -170,6 +174,51 @@ def test_preemption_victim_has_fewest_generated(setup):
         if victims:
             break
     assert victims and victims[0] == young.rid
+
+
+def test_cost_victim_prefers_cheapest_readmission(setup):
+    """Default cost-aware policy: the victim is the slot whose estimated
+    re-admission (store restore round trip) is cheapest — here the OLD
+    request, whose context occupies fewer KV blocks, even though the
+    legacy fewest-generated rule would preempt the young one."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                 n_blocks=16, kv_overcommit=2.0)
+    assert eng._victim_policy == "cost"
+    old = ServeRequest(prompt=list(range(1, 9)), max_new_tokens=30)
+    eng.admit(old)
+    for _ in range(6):
+        eng.step()                            # old: ctx ~15 -> 2 blocks
+    young = ServeRequest(prompt=list(range(1, 17)), max_new_tokens=30)
+    assert eng.admit(young)                   # young: ctx 17+ -> 3 blocks
+    eng.step()
+    s_old = next(i for i, r in enumerate(eng.slots) if r is old)
+    s_young = next(i for i, r in enumerate(eng.slots) if r is young)
+    assert len(young.generated) < len(old.generated)
+    assert eng._victim_cost(s_old) < eng._victim_cost(s_young)
+    # cost dominates: old is picked even though young has fewer tokens
+    assert eng._pick_victim([s_old, s_young]) == s_old
+
+
+def test_cost_victim_tie_breaks_by_fewest_generated(setup):
+    """Context is bucketed to the block grid before pricing, so two slots
+    in the same bucket cost the same — and the fewest-generated rule must
+    remain the live tie-break (regression gate for the legacy behavior)."""
+    cfg, params = setup
+    eng = Engine(cfg, params, max_batch=4, max_len=64, block_size=8,
+                 n_blocks=16, kv_overcommit=2.0)
+    r1 = ServeRequest(prompt=list(range(1, 7)), max_new_tokens=30)
+    eng.admit(r1)
+    for _ in range(4):
+        eng.step()
+    r2 = ServeRequest(prompt=list(range(1, 10)), max_new_tokens=30)
+    assert eng.admit(r2)
+    eng.step()
+    s1 = next(i for i, r in enumerate(eng.slots) if r is r1)
+    s2 = next(i for i, r in enumerate(eng.slots) if r is r2)
+    assert len(r2.generated) < len(r1.generated)
+    assert eng._victim_cost(s1) == eng._victim_cost(s2)   # same block bucket
+    assert eng._pick_victim([s1, s2]) == s2               # fewest generated
 
 
 def test_ledger_churn_never_leaks(setup):

@@ -312,3 +312,34 @@ def test_store_pins_hot_prefix():
             # pinned keys are still reclaimable by full eviction
             store.evict_unreferenced()
             assert not store.contains("__prefix__", "hot")
+
+
+# -- spot/on-demand pricing in dispatch ---------------------------------------
+
+def test_pricing_mode_reranks_dispatch(setup):
+    """Two identical placements split evenly when both are spot-billed;
+    marking one ``pricing="ondemand"`` re-ranks the cost objective (its
+    $/hr nearly triples) and the spot pipeline absorbs most of the load."""
+    cfg, params = setup
+    srv = GlobalServer(cfg, None, max_batch=2, max_len=64, dispatch="cost")
+    p_spot = srv.add_pipeline(params, ["s-0"],
+                              placement=_single(SPEC, HIGH_HBM))
+    p_od = srv.add_pipeline(params, ["o-0"],
+                            placement=_single(SPEC, HIGH_HBM),
+                            pricing="ondemand")
+    assert p_spot.pricing == "spot" and p_od.pricing == "ondemand"
+    for _ in range(20):
+        srv.submit(_req(60, 30))
+    # spot $0.70/hr vs OD $2.00/hr on the same table -> ~2.9x the weight
+    assert len(p_spot.queue) > 2 * len(p_od.queue)
+    assert len(p_od.queue) > 0                 # weighted RR, not starvation
+
+    # control: both spot -> even split
+    srv2 = GlobalServer(cfg, None, max_batch=2, max_len=64, dispatch="cost")
+    q0 = srv2.add_pipeline(params, ["a-0"],
+                           placement=_single(SPEC, HIGH_HBM))
+    q1 = srv2.add_pipeline(params, ["b-0"],
+                           placement=_single(SPEC, HIGH_HBM))
+    for _ in range(20):
+        srv2.submit(_req(60, 30))
+    assert len(q0.queue) == len(q1.queue) == 10

@@ -1,0 +1,115 @@
+"""TensorStore shadow-ledger sanitizer: typed invariant errors
+(double-evict, pinned-evict, refcount underflow), divergence crosscheck,
+env arming via REPRO_KV_SANITIZE, and the on_transfer byte-movement hook."""
+
+import numpy as np
+import pytest
+
+from repro.serving.tensor_store import (DoubleEvictError, PinnedEvictError,
+                                        RefcountUnderflowError,
+                                        StoreSanitizerError, TensorStore)
+
+
+def _params(scale=1.0):
+    return {"w": np.ones((4, 4), np.float32) * scale}   # 64 bytes
+
+
+def test_clean_lifecycle_under_sanitizer():
+    st = TensorStore(sanitize=True)
+    st.put("m", "p0", _params())
+    got = st.attach("m", "p0")
+    assert got["w"].shape == (4, 4)
+    st.detach("m", "p0")
+    p, _ = st.load("m", "p1", _params)
+    assert p is not None
+    st.detach("m", "p1")
+    st.put_or_attach("m", "p0", _params)      # hit path
+    st.detach("m", "p0")
+    assert st.take("m", "p1")["w"].sum() == 16
+    assert st.evict_unreferenced() == 1       # p0
+    assert st.check_consistent()
+
+
+def test_budgeted_eviction_stays_clean():
+    st = TensorStore(budget_bytes=128, sanitize=True)
+    for i in range(4):
+        st.put("m", f"p{i}", _params())
+    assert st.resident_bytes() <= 128
+    st.evict_to(0)
+    assert st.resident_bytes() == 0
+
+
+def test_detach_underflow_raises_when_armed():
+    st = TensorStore(sanitize=True)
+    st.put("m", "p0", _params())
+    with pytest.raises(RefcountUnderflowError):
+        st.detach("m", "p0")                  # never attached
+    st.attach("m", "p0")
+    st.detach("m", "p0")
+    with pytest.raises(RefcountUnderflowError):
+        st.detach("m", "p0")                  # second detach underflows
+
+
+def test_detach_underflow_tolerated_when_disarmed():
+    st = TensorStore(sanitize=False)
+    st.put("m", "p0", _params())
+    st.detach("m", "p0")                      # legacy tolerant no-op
+    assert st.refcount("m", "p0") == 0
+
+
+def test_double_evict_raises():
+    st = TensorStore(sanitize=True)
+    st.put("m", "p0", _params())
+    st._drop(("m", "p0"))
+    with pytest.raises(DoubleEvictError):
+        st._drop(("m", "p0"))
+
+
+def test_attach_after_evict_raises_double_evict():
+    st = TensorStore(sanitize=True)
+    st.put("m", "p0", _params())
+    st.evict_unreferenced()
+    with pytest.raises(DoubleEvictError):
+        st.attach("m", "p0")
+
+
+def test_pinned_evict_raises():
+    st = TensorStore(sanitize=True)
+    st.put("m", "p0", _params())
+    st.attach("m", "p0")
+    with pytest.raises(PinnedEvictError):
+        st._drop(("m", "p0"))
+    # the public eviction paths respect the pin and stay clean
+    assert st.evict_unreferenced() == 0
+    assert st.evict_to(0) == 0
+    assert st.take("m", "p0") is None
+
+
+def test_divergence_detected_on_next_op():
+    st = TensorStore(sanitize=True)
+    st.put("m", "p0", _params())
+    st._refcount[("m", "p0")] += 1            # bug behind the ledger's back
+    with pytest.raises(StoreSanitizerError, match="refcount"):
+        st.put("m", "p1", _params())
+
+
+def test_env_arms_sanitizer(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_SANITIZE", "1")
+    assert TensorStore().sanitize
+    monkeypatch.setenv("REPRO_KV_SANITIZE", "0")
+    assert not TensorStore().sanitize
+    monkeypatch.delenv("REPRO_KV_SANITIZE")
+    assert not TensorStore().sanitize
+
+
+def test_on_transfer_hook_accounts_bytes():
+    moved = []
+    st = TensorStore(sanitize=True,
+                     on_transfer=lambda kind, n: moved.append((kind, n)))
+    st.put("m", "p0", _params())
+    st.put("m", "p1", _params())
+    st.take("m", "p0")
+    assert moved == [("put", 64), ("put", 64), ("take", 64)]
+    # misses don't fire the hook
+    assert st.take("m", "absent") is None
+    assert len(moved) == 3
